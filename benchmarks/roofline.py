@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g).
+
+Reads results/dryrun/*.json (the compiled dry-run artifacts) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory term     = HLO_bytes_per_dev / HBM_bw
+    collective term = collective_bytes_per_dev / link_bw
+
+(The recorded flops/bytes are already per-device — the HLO text is the
+post-SPMD per-device program — so the spec's "/ chips" division is built
+in.)  Also reports MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for
+train, 2·N·D for prefill/decode, and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs x chips).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+from repro.configs.base import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+# NGHF train step cost in forward-equivalents (per token of the gradient
+# batch): grad(~4 with remat) + CG-batch work folded in via cg_frac:
+# 12 products x ~6 fwd-equiv / 8 + 9 evals / 8 ~ +10.  Used only for the
+# "useful compute" MODEL_FLOPS denominator.
+TRAIN_FWD_EQUIV = 4 + (12 * 6 + 9) / 8.0
+
+
+def _active_params(cfg) -> float:
+    """Parameter count with MoE experts scaled to the active top-k."""
+    from repro.models.registry import get_model
+    n = get_model(cfg).param_count()
+    if cfg.num_experts:
+        # expert weights are E x (3 x d x ff) per moe layer
+        n_moe_layers = sum(1 for k in (cfg.block_pattern * cfg.num_layers)
+                           [: cfg.num_layers] if k in ("moe", "swamoe"))
+        gate_mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        per_expert = gate_mult * cfg.d_model * cfg.d_ff
+        n_expert_total = cfg.num_experts * per_expert * n_moe_layers
+        n_active = (cfg.num_experts_per_tok * per_expert * n_moe_layers)
+        n = n - n_expert_total + n_active
+    return float(n)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    n_active = _active_params(cfg)
+    tokens = shp.global_batch * (shp.seq_len if shp.mode != "decode" else 1)
+    if shp.mode == "train":
+        # one fwd = 2·N·D; the full NGHF update is ~TRAIN_FWD_EQUIV fwds
+        return 2.0 * n_active * tokens * TRAIN_FWD_EQUIV
+    return 2.0 * n_active * tokens
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    temp_gib: float
+    fits: bool
+
+    def fmt(self):
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+                f"{self.compute_s:10.3e} {self.memory_s:10.3e} "
+                f"{self.collective_s:10.3e} {self.bottleneck:10s} "
+                f"{self.useful_ratio:7.3f} {self.temp_gib:7.2f} "
+                f"{'Y' if self.fits else 'OVER'}")
+
+
+def analyze_record(rec: dict) -> RooflineRow:
+    chips = rec["num_devices"]
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["bytes_accessed"] / HBM_BW
+    coll = rec["collectives"]["total"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(rec["flops"] * chips, 1.0)
+    temp = rec["memory"]["temp_size_in_bytes"] / 2**30
+    args = rec["memory"]["argument_size_in_bytes"] / 2**30
+    return RooflineRow(rec["arch"], rec["shape"], rec["mesh"],
+                       compute, memory, coll, bottleneck, mf, useful,
+                       temp, temp + args <= 16.0)
+
+
+def load_all(mesh_filter=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        if mesh_filter and rec["mesh"] != mesh_filter:
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def main():
+    print(f"{'arch':22s} {'shape':12s} {'mesh':10s} {'compute_s':>10s} "
+          f"{'memory_s':>10s} {'collect_s':>10s} {'bottleneck':10s} "
+          f"{'useful':>7s} {'tempGiB':>7s} fits")
+    rows = load_all()
+    for r in rows:
+        print(r.fmt())
+    # headline: most collective-bound and worst-roofline pairs (single pod)
+    sp = [r for r in rows if r.mesh == "pod16x16"]
+    if sp:
+        worst = min(sp, key=lambda r: r.useful_ratio)
+        collbound = max(sp, key=lambda r: r.collective_s /
+                        max(r.compute_s, 1e-12))
+        print(f"\nworst useful-compute ratio: {worst.arch} {worst.shape} "
+              f"({worst.useful_ratio:.3f})")
+        print(f"most collective-bound:      {collbound.arch} "
+              f"{collbound.shape} "
+              f"(coll/compute={collbound.collective_s/max(collbound.compute_s,1e-12):.2f})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Table 1: proportion of time cost inside the CG stage.
+
+Times the four stages of one CG iteration for NGHF on the LSTM acoustic
+model (paper: modified forward prop 15.1 %, EBP 7.8 %, lattice statistics
+4.1 %, candidate evaluation 73.0 %).  Our decomposition:
+
+  * jvp        — the modified forward propagation (R-operator)
+  * vjp        — EBP with the substituted cotangent
+  * lattice    — forward-backward statistics collection (loss + grads on
+                 the logit factor)
+  * eval       — evaluating one candidate Δθ on the CG batch
+
+Exact percentages depend on CG batch size and lattice density; the
+qualitative claim reproduced is candidate evaluation dominating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs.acoustic import LSTM
+from repro.core import tree_math as tm
+from repro.data.synthetic import asr_batch
+from repro.losses.forward_backward import forward_backward
+from repro.losses.sequence import MPELoss
+from repro.models import acoustic
+
+CFG = LSTM.smoke().replace(hidden_dim=64, num_outputs=40)
+LOSS = MPELoss(kappa=0.5)
+
+
+def run(budget: str = "small"):
+    key = jax.random.PRNGKey(0)
+    params = acoustic.init_params(CFG, key)
+    batch = asr_batch(0, batch=8, num_frames=32, num_states=CFG.num_outputs,
+                      input_dim=CFG.input_dim)
+
+    def f(p):
+        return acoustic.forward(CFG, p, batch["feats"])
+
+    v = jax.tree.map(lambda x: jax.random.normal(key, x.shape) * 0.01, params)
+
+    jvp_fn = jax.jit(lambda p, vv: jax.jvp(f, (p,), (vv,))[1])
+    vjp_fn = jax.jit(lambda p, ct: jax.vjp(f, p)[1](ct)[0])
+    lat_fn = jax.jit(lambda lg: LOSS.value(lg, batch)[0])
+    eval_fn = jax.jit(lambda p, d: LOSS.value(f(tm.add(p, d)), batch)[0])
+
+    logits = f(params)
+    cot = jnp.ones_like(logits) / logits.size
+
+    t_jvp = time_call(jvp_fn, params, v)
+    t_vjp = time_call(vjp_fn, params, cot)
+    t_lat = time_call(lat_fn, logits)
+    t_eval = time_call(eval_fn, params, v)
+    total = t_jvp + t_vjp + t_lat + t_eval
+    rows = []
+    for name, t in (("modified_fwd_jvp", t_jvp), ("ebp_vjp", t_vjp),
+                    ("lattice_stats", t_lat), ("candidate_eval", t_eval)):
+        rows.append(emit(f"table1.{name}", t,
+                         f"pct={100.0 * t / total:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,141 @@
+"""Paper Table 2/3 + Fig. 2: optimiser comparison for LSTM-HMM MPE training.
+
+Synthetic ASR task (no MGB data in this container — see DESIGN.md): LSTM
+acoustic model, frame-CE pretraining with SGD, then MPE sequence training
+with SGD / Adam / NG / HF / NGHF.  Reported: MPE accuracy evolution, the
+best validation accuracy, #updates used, and a held-out frame-error-rate
+proxy for the paper's evaluation-set WER (Table 3).
+
+The paper's qualitative claims under test:
+  * NG/HF/NGHF reach better MPE acc in 10-20 updates than SGD/Adam in
+    hundreds (paper: 16-48 vs 10^5).
+  * NGHF >= HF, NG individually.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs.acoustic import LSTM
+from repro.core.nghf import SecondOrderConfig, second_order_update
+from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
+                                   adam_update, sgd_init, sgd_update)
+from repro.data.synthetic import asr_batch
+from repro.losses.sequence import CELoss, MPELoss
+from repro.models import acoustic
+
+CFG = LSTM.smoke().replace(hidden_dim=48, num_outputs=30)
+LOSS = MPELoss(kappa=0.5)
+FRAMES = 32
+BATCH_FIRST = 16      # SGD/Adam mini-batch (paper: a few utterances)
+BATCH_GRAD = 64       # second-order gradient batch (paper: 25h vs ~minutes)
+BATCH_CG = 8
+
+
+def _fwd(cfg):
+    return lambda p, b: (acoustic.forward(cfg, p, b["feats"]), 0.0)
+
+
+def _batch(seed, batch=BATCH_FIRST):
+    return asr_batch(seed, batch=batch, num_frames=FRAMES,
+                     num_states=CFG.num_outputs, input_dim=CFG.input_dim,
+                     noise=1.2)
+
+
+def _pretrain_ce(params, steps=60):
+    """Frame-level CE pretraining (the paper's starting point).  Adam is
+    used here purely to build a competent CE baseline quickly; the paper's
+    comparison starts FROM the CE model."""
+    ce = CELoss()
+    fwd = lambda p, b: (acoustic.forward(CFG, p, b["feats"]), 0.0)  # noqa
+    opt = AdamConfig(lr=3e-3)
+    state = adam_init(params, opt)
+    step = jax.jit(lambda p, s, b: adam_update(fwd, ce, opt, p, b, s))
+    for i in range(steps):
+        params, state, _ = step(params, state, _batch(1000 + i))
+    return params
+
+
+def _eval_heldout(params, n=4):
+    """Held-out MPE accuracy + frame-error proxy (the WER stand-in)."""
+    accs, fers = [], []
+    for i in range(n):
+        b = _batch(50_000 + i)
+        logits = acoustic.forward(CFG, params, b["feats"])
+        _, m = LOSS.value(logits, b)
+        accs.append(float(m["mpe_acc"]))
+        fer = float(jnp.mean(jnp.argmax(logits, -1) != b["lattice"].ref_states))
+        fers.append(fer)
+    return float(np.mean(accs)), float(np.mean(fers))
+
+
+def run(budget: str = "small"):
+    n_second_order = 8 if budget == "small" else 16
+    n_first_order = 160 if budget == "small" else 800
+    key = jax.random.PRNGKey(0)
+    base = _pretrain_ce(acoustic.init_params(CFG, key))
+    counts = acoustic.share_counts(CFG, base)
+    rows, curves = [], {}
+    ce_acc, ce_fer = _eval_heldout(base)
+    rows.append(emit("table2.ce_baseline", 0.0,
+                     f"acc={ce_acc:.4f};fer={ce_fer:.4f};updates=0"))
+
+    for method in ("ng", "hf", "nghf"):
+        params = base
+        socfg = SecondOrderConfig(method=method, cg_iters=6, ng_iters=3)
+        lam = {"ng": 10.0, "hf": 1.0, "nghf": 10.0}[method]
+        upd = jax.jit(lambda p, gb, cb, m=method, l=lam: second_order_update(
+            _fwd(CFG), LOSS, SecondOrderConfig(method=m, cg_iters=6,
+                                               ng_iters=3, lam=l),
+            p, gb, cb, share_counts=counts))
+        curve = []
+        us = None
+        for u in range(n_second_order):
+            gb = _batch(u, batch=BATCH_GRAD)
+            cb = _batch(10_000 + u, batch=BATCH_CG)
+            if us is None:
+                us = time_call(lambda: upd(params, gb, cb), warmup=1, iters=1)
+            params, m = upd(params, gb, cb)
+            curve.append(float(m["mpe_acc"]))
+        curves[method] = curve
+        acc, fer = _eval_heldout(params)
+        rows.append(emit(f"table2.{method}", us,
+                         f"acc={acc:.4f};fer={fer:.4f};"
+                         f"updates={n_second_order}"))
+
+    for name, mk in (("sgd", lambda: (SGDConfig(lr=0.2), sgd_init, sgd_update)),
+                     ("adam", lambda: (AdamConfig(lr=2e-3), adam_init,
+                                       adam_update))):
+        opt, init, update = mk()
+        params = base
+        state = init(params, opt)
+        step = jax.jit(lambda p, s, b: update(_fwd(CFG), LOSS, opt, p, b, s))
+        curve = []
+        us = None
+        for u in range(n_first_order):
+            b = _batch(u % 32)
+            if us is None:
+                us = time_call(lambda: step(params, state, b), warmup=1,
+                               iters=1)
+            params, state, m = step(params, state, b)
+            if u % 10 == 0:
+                curve.append(float(m.get("mpe_acc", np.nan)))
+        curves[name] = curve
+        acc, fer = _eval_heldout(params)
+        rows.append(emit(f"table2.{name}", us,
+                         f"acc={acc:.4f};fer={fer:.4f};"
+                         f"updates={n_first_order}"))
+    # paper Fig. 2: accuracy-evolution curves
+    import json as _json
+    import os as _os
+    out = _os.path.join(_os.path.dirname(__file__), "..", "results",
+                        "fig2_curves.json")
+    with open(out, "w") as f:
+        _json.dump(curves, f, indent=1)
+    return rows, curves
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,10 @@
+"""Batched serving example: continuous decode over a recurrent (xLSTM)
+model — O(1) state per token, the long_500k-capable path.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "xlstm-125m", "--smoke", "--requests", "4",
+          "--max-new", "12", "--cache-len", "64"])

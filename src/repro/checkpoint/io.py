@@ -1,0 +1,82 @@
+"""Pytree checkpointing without external dependencies.
+
+Checkpoints are a directory containing ``arrays.npz`` (leaves keyed by
+flattened path) plus ``manifest.json`` (tree structure, step metadata).
+Works for params, optimiser state, and NGHF CG diagnostics alike.  Restore
+optionally re-shards against a target sharding tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, tree, *, step: int = 0,
+                    extra: Optional[dict] = None):
+    """Atomic save: write to a temp dir, then rename."""
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(os.path.abspath(ckpt_dir))
+                           or ".")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: np.asarray(v) for k, v in flat.items()})
+        manifest = {"step": step, "treedef": str(treedef),
+                    "keys": sorted(flat.keys()),
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(ckpt_dir):
+            shutil.rmtree(ckpt_dir)
+        os.rename(tmp, ckpt_dir)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_checkpoint(ckpt_dir: str, like, *, shardings=None):
+    """Restore into the structure of ``like``.  If ``shardings`` (a pytree
+    of NamedSharding matching ``like``) is given, leaves are device_put
+    against it — the multi-pod restore path."""
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(ckpt_dir, "arrays.npz"))
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    restored_flat = {k: data[k] for k in flat_like}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = [k for k, _ in sorted(_flatten(like).items())]
+    # rebuild in tree order
+    path_leaves = jax.tree_util.tree_flatten_with_path(like)[0]
+    out_leaves = []
+    for path, leaf in path_leaves:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = restored_flat[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out_leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, manifest["step"]

@@ -1,0 +1,18 @@
+"""Paper-faithful acoustic model configs (Sec. 7 of the NGHF paper).
+
+RNN: two 1000-dim recurrent layers + one 1000-dim feedforward layer,
+unfolded 20 steps.  LSTM: same structure with LSTM cells.  TDNN: five
+1000-dim layers with context splices {-2..2},{-1,2},{-3,3},{-7,2},{0}.
+Output layer ~6000 tied triphone states.
+"""
+from repro.configs.base import AcousticConfig
+
+RNN_SIGMOID = AcousticConfig(name="rnn-sigmoid", kind="rnn", activation="sigmoid")
+RNN_RELU = AcousticConfig(name="rnn-relu", kind="rnn", activation="relu")
+LSTM = AcousticConfig(name="lstm", kind="lstm", activation="sigmoid")
+TDNN_SIGMOID = AcousticConfig(name="tdnn-sigmoid", kind="tdnn", activation="sigmoid")
+TDNN_RELU = AcousticConfig(name="tdnn-relu", kind="tdnn", activation="relu")
+
+ACOUSTIC_CONFIGS = {
+    c.name: c for c in (RNN_SIGMOID, RNN_RELU, LSTM, TDNN_SIGMOID, TDNN_RELU)
+}

@@ -1,0 +1,26 @@
+"""Chameleon-34B [arXiv:2405.09818] — early-fusion VLM, 48L, d_model=8192,
+64H (GQA kv=8), d_ff=22016, vocab 65536 (includes VQ image tokens), qk-norm.
+
+Frontend stub per the assignment carve-out: Chameleon's images are VQ-VAE
+token ids living in the shared 65 536 vocab, so the stubbed frontend is the
+VQ tokenizer itself — ``input_specs()`` supplies mixed text+image *token ids*
+directly.  The language backbone (the assigned deliverable) is full.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    source="arXiv:2405.09818",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    head_dim=128,
+    qk_norm=True,
+    block_pattern=("attn",),
+    supports_long_context=True,   # beyond-paper sliding-window variant
+    param_sharding="2d",
+)

@@ -1,0 +1,36 @@
+"""Whisper-base [arXiv:2212.04356] — encoder-decoder audio model.
+
+The mel-spectrogram + conv feature extractor frontend is a STUB per the
+assignment carve-out: ``input_specs()`` provides precomputed frame embeddings
+of shape (batch, encoder_frames, d_model).  The transformer backbone
+(6L encoder + 6L decoder, d_model=512, 8 heads, d_ff=2048, vocab 51865) is
+implemented in full.  The learned positional table is extended beyond the
+real model's 448 decoder positions to satisfy the assigned input shapes
+(geometry-preserving change, noted in DESIGN.md).
+
+long_500k is SKIPPED for this arch (encoder-decoder, architecturally capped
+decoder; see DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=6,                # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    head_dim=64,
+    activation="gelu",
+    norm="layernorm",
+    learned_positions=True,
+    is_encoder_decoder=True,
+    encoder_layers=6,
+    encoder_frames=1500,
+    block_pattern=("attn",),
+    supports_long_context=False,
+    param_sharding="1d",         # 72M params: plain tensor parallel suffices
+)

@@ -1,0 +1,130 @@
+"""The linear conjugate-gradient engine (paper Alg. 1 + Secs. 4.2/4.3).
+
+Solves ``B x = b`` for θ-sized pytrees with a matrix-free ``Bv`` operator,
+inside one jitted computation (``lax.scan`` over CG iterations — the
+"sequential CG driven by the master" of Fig. 1, with each product
+data-parallel over the CG batch underneath).
+
+Three paper-specific features on top of textbook CG:
+
+  1. **Candidate-update selection** — every iterate Δθ_m is (optionally)
+     evaluated on the CG batch and the argmin candidate is returned
+     (Alg. 1's "best performance on the validation set"; 73 % of CG wall
+     time in paper Table 1).
+  2. **Shared-parameter preconditioning** (Sec. 4.3) — diagonal PCG with
+     M⁻¹ = diag(1/c), c = per-leaf share counts: equivalently plain CG in
+     the √c-rescaled variable space, i.e. residuals/directional derivatives
+     are normalised by the number of times a parameter is applied, so
+     heavily-shared weights stop dominating ‖r‖ and ‖Bv‖.
+  3. **Negative-curvature guard** — if vᵀBv ≤ 0 (possible for the MBR GN
+     matrix, Sec. 3.2, or from fp error without the Sec. 4.2 rescaling)
+     the iteration freezes and the best candidate so far is kept.
+
+Tikhonov damping (B + ηI) is available for the baseline comparison the
+paper makes against (Sainath et al., 2013a).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+class CGResult(NamedTuple):
+    x: dict                    # best candidate Δθ
+    best_loss: jnp.ndarray     # its CG-batch loss (inf if eval_fn is None)
+    best_iter: jnp.ndarray     # which iteration produced it
+    quad: jnp.ndarray          # (M,) quadratic-model value per iteration
+    resid: jnp.ndarray         # (M,) preconditioned residual norm
+    curv: jnp.ndarray          # (M,) vᵀBv per iteration
+    losses: jnp.ndarray        # (M,) candidate losses (inf where not eval'd)
+
+
+def cg_solve(bv_fn: Callable, b, *, iters: int,
+             precond: Optional[dict] = None,
+             eval_fn: Optional[Callable] = None,
+             damping: float = 0.0,
+             eval_every: int = 1,
+             constrain: Optional[Callable] = None) -> CGResult:
+    """Run ``iters`` CG iterations on B x = b.
+
+    bv_fn:    v -> B v (θ-sized pytree in/out).
+    b:        right-hand side (e.g. -∇L, or the NG direction for NGHF).
+    precond:  per-leaf share counts c (M = diag(c)); None => identity.
+    eval_fn:  Δθ -> scalar CG-batch loss for candidate selection.
+    damping:  Tikhonov η (B + ηI) — the baseline the paper improves on.
+    constrain: optional θ-tree -> θ-tree sharding constraint applied to
+              every loop-carried vector each iteration.  Without it GSPMD's
+              while-loop fixpoint can settle the carries on REPLICATED
+              (measured: 7 full-size f32 vectors/dev on qwen2.5-3b).
+    """
+    if constrain is None:
+        constrain = lambda t: t          # noqa: E731
+
+    def Minv(t):
+        if precond is None:
+            return t
+        return jax.tree.map(lambda x, c: x / jnp.asarray(c, x.dtype), t, precond)
+
+    def B(v):
+        out = bv_fn(v)
+        if damping:
+            out = tm.axpy(damping, v, out)
+        return out
+
+    x0 = tm.zeros_like(b)
+    r0 = b                       # residual of x=0
+    z0 = Minv(r0)
+    v0 = z0
+    rz0 = tm.vdot(r0, z0)
+
+    def body(carry, m):
+        x, r, z, v, rz, best_x, best_loss, best_iter, dead = carry
+        bv = B(v)
+        vbv = tm.vdot(v, bv)
+        bad = (vbv <= 0.0) | dead
+        alpha = jnp.where(bad, 0.0, rz / jnp.maximum(vbv, 1e-30))
+        x_new = tm.axpy(alpha, v, x)
+        r_new = tm.axpy(-alpha, bv, r)
+        z_new = Minv(r_new)
+        rz_new = tm.vdot(r_new, z_new)
+        beta = jnp.where(bad, 0.0, rz_new / jnp.maximum(rz, 1e-30))
+        v_new = tm.axpy(beta, v, z_new)
+        x_new, r_new, z_new, v_new = (constrain(t) for t in
+                                      (x_new, r_new, z_new, v_new))
+        # quadratic model g(x) = 0.5 xᵀBx - xᵀb, via the residual identity
+        # Bx = b - r  =>  g(x) = -0.5 (xᵀb + xᵀr): no extra B product.
+        quad = -0.5 * (tm.vdot(x_new, r_new) + tm.vdot(x_new, b))
+        if eval_fn is not None:
+            do_eval = (m % eval_every) == 0
+            loss = jax.lax.cond(do_eval & ~bad,
+                                lambda: eval_fn(x_new),
+                                lambda: jnp.asarray(jnp.inf, jnp.float32))
+        else:
+            loss = jnp.asarray(jnp.inf, jnp.float32)
+        better = loss < best_loss
+        best_x = constrain(tm.where(better, x_new, best_x))
+        best_loss = jnp.where(better, loss, best_loss)
+        best_iter = jnp.where(better, m, best_iter)
+        new_carry = (x_new, r_new, z_new, v_new, rz_new,
+                     best_x, best_loss, best_iter, bad)
+        return new_carry, (quad, jnp.sqrt(jnp.maximum(rz_new, 0.0)), vbv, loss)
+
+    init = (x0, r0, z0, v0, rz0, x0,
+            jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(-1, jnp.int32),
+            jnp.asarray(False))
+    (x, r, z, v, rz, best_x, best_loss, best_iter, dead), hist = \
+        jax.lax.scan(body, init, jnp.arange(iters))
+    quad, resid, curv, losses = hist
+    if eval_fn is None:
+        best_x, best_iter = x, jnp.asarray(iters - 1, jnp.int32)
+    else:
+        # if nothing evaluated better than inf (e.g. all bad), fall back
+        none_found = ~jnp.isfinite(best_loss)
+        best_x = tm.where(none_found, x, best_x)
+        best_iter = jnp.where(none_found, iters - 1, best_iter)
+    return CGResult(x=best_x, best_loss=best_loss, best_iter=best_iter,
+                    quad=quad, resid=resid, curv=curv, losses=losses)

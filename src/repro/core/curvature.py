@@ -1,0 +1,166 @@
+"""Curvature-matrix-vector products (paper Secs. 3.4 and 5.2).
+
+The Gauss-Newton product  G v = Jᵀ (H^ (J v))  and the empirical-Fisher
+product  F v = Jᵀ (F^ (J v))  are computed matrix-free:
+
+  * ``J v`` — the directional derivative / Pearlmutter R-operator — is a
+    single ``jax.linearize`` JVP through the model (the modified forward
+    propagation of Eqn. 12; the LSTM gating rule Eqn. 13 is what JVP does
+    for Hadamard products automatically).
+  * ``H^ ·`` / ``F^ ·`` are the per-frame logit-space factors supplied by
+    the LossSpec (Eqns. 11 and 19) — never materialised as K x K blocks.
+  * ``Jᵀ u`` — EBP with a substituted output cotangent — is the transpose
+    of the linearized JVP (``jax.linear_transpose``), reusing the stored
+    forward residuals.
+
+``linearize`` is called ONCE per CG stage (the parameters and CG batch are
+fixed across CG iterations), so each CG iteration costs one JVP + one
+transposed JVP + (optionally) one candidate-evaluation forward — matching
+the cost profile in paper Table 1.
+
+Numerical stability (paper Sec. 4.2): when ‖θ‖₂ ≫ ‖v‖₂ the directional
+derivative loses float precision and the quadratic form can evaluate
+negative even for PSD G.  ``stabilize=True`` computes J v' with
+v' = (‖θ‖₂/‖v‖₂) v and rescales the final product by the inverse factor —
+algebraically a no-op (G is linear), numerically the paper's fix that cuts
+the CG iterations needed from ~200 to 5-8.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+
+
+class CurvatureOps(NamedTuple):
+    """Matrix-free operators bound to (params, cg_batch)."""
+
+    gnvp: Callable        # v -> G v      (Gauss-Newton)
+    fvp: Callable         # v -> F v      (empirical Fisher, from MMI/CE)
+    eval_loss: Callable   # delta -> loss(params + delta) on the CG batch
+    logits: jnp.ndarray   # primal logits on the CG batch
+
+
+def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
+                       stabilize: bool = True,
+                       theta_norm=None,
+                       mode: str = "rematvp") -> CurvatureOps:
+    """forward_fn(params, batch) -> (logits, aux).
+
+    mode="linearize": linearize ONCE and reuse residuals across CG
+    iterations — fastest, but holds every forward intermediate of the CG
+    batch in memory for the whole CG stage (fine for the paper-scale
+    acoustic models, catastrophic for 30-layer LLMs: ~17 GiB/dev measured
+    on qwen2.5-3b train_4k; see EXPERIMENTS.md §Perf iter 1).
+
+    mode="rematvp": per-product jax.jvp + jax.vjp — forward-mode stores
+    only live tensors, reverse-mode under remat stores only layer carries.
+    ~1.7x compute per CG iteration, O(30x) less resident memory.
+    """
+
+    def f(p):
+        return forward_fn(p, batch)[0]
+
+    if mode == "linearize":
+        logits, jvp_fn = jax.linearize(f, params)
+        vjp_fn = jax.linear_transpose(jvp_fn, params)
+    else:
+        logits = None
+
+        def jvp_fn(v):                           # noqa: ANN001
+            _, jv = jax.jvp(f, (params,), (v,))
+            return jv
+
+        def vjp_fn(cot):
+            _, pullback = jax.vjp(f, params)
+            return pullback(cot)
+
+    if theta_norm is None:
+        theta_norm = tm.norm(params)
+
+    def _product(factor_vp, v):
+        if stabilize:
+            v_norm = jnp.maximum(tm.norm(v), 1e-30)
+            s = theta_norm / v_norm
+            v_in = tm.scale(v, s)
+        else:
+            s = 1.0
+            v_in = v
+        # JVP requires tangent dtype == primal dtype (bf16 CG state vs
+        # f32 master params)
+        v_in = tm.cast_like(v_in, params)
+        if mode == "linearize":
+            out_primal = logits
+            jv = jvp_fn(v_in)
+            hu = factor_vp(out_primal, batch, jv)
+            (out,) = vjp_fn(hu)
+        else:
+            out_primal, jv = jax.jvp(f, (params,), (v_in,))
+            hu = factor_vp(out_primal, batch, jv)
+            _, pullback = jax.vjp(f, params)
+            (out,) = pullback(hu)
+        return tm.scale(out, 1.0 / s) if stabilize else out
+
+    def gnvp(v):
+        return _product(loss_spec.gn_vp, v)
+
+    def fvp(v):
+        return _product(loss_spec.fisher_vp, v)
+
+    def eval_loss(delta):
+        lg, _ = forward_fn(tm.add(params, tm.cast_like(delta, params)), batch)
+        return loss_spec.value(lg, batch)[0]
+
+    return CurvatureOps(gnvp=gnvp, fvp=fvp, eval_loss=eval_loss, logits=logits)
+
+
+def grad_and_loss(forward_fn, loss_spec, params, batch, *,
+                  microbatches: int = 1, constrain=None):
+    """Gradient-accumulation stage: mean loss + gradient over the gradient
+    batch (data-parallel under pjit; the accumulation all-reduce is emitted
+    by GSPMD — the Fig. 1 master/worker sum).
+
+    microbatches > 1 splits the batch's leading dim and accumulates the
+    gradient over a (rematted) sequential scan — the standard activation-
+    memory lever for very large models (§Perf hillclimb 2: qwen2-72b's
+    grad-stage residuals scale 1/microbatches).  ``constrain`` keeps the
+    accumulated-gradient scan carry on its storage sharding.
+    """
+
+    def obj(p, b):
+        logits, aux = forward_fn(p, b)
+        loss, metrics = loss_spec.value(logits, b)
+        # ``aux`` is the already-scaled auxiliary loss (e.g. MoE router
+        # load-balance, scaled by cfg.router_aux_coef in the step builder).
+        return loss + aux, metrics
+
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            obj, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    B = jax.tree.leaves(batch)[0].shape[0]
+    k = microbatches
+    assert B % k == 0, (B, k)
+    split = jax.tree.map(
+        lambda x: x.reshape((k, B // k) + x.shape[1:])
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == B else x,
+        batch)
+    ident = constrain if constrain is not None else (lambda t: t)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            obj, has_aux=True)(params, mb)
+        acc = ident(jax.tree.map(lambda a, g: a + g / k, acc, grads))
+        return (acc, loss_acc + loss / k), metrics
+
+    zeros = ident(jax.tree.map(jnp.zeros_like, params))
+    (grads, loss), metrics = jax.lax.scan(body, (zeros, jnp.float32(0.0)),
+                                          split)
+    metrics = jax.tree.map(lambda m: m.mean(0) if hasattr(m, "ndim") and
+                           m.ndim >= 1 else m, metrics)
+    return loss, metrics, grads

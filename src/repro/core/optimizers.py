@@ -1,0 +1,73 @@
+"""First-order baselines the paper compares against (built from scratch —
+no optax in this container): SGD with momentum and Adam (Kingma & Ba 2015).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.curvature import grad_and_loss
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.0
+    clip_norm: float = 0.0
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 0.0
+
+
+def _clip(grads, clip_norm):
+    if not clip_norm:
+        return grads
+    g_norm = tm.norm(grads)
+    factor = jnp.minimum(1.0, clip_norm / jnp.maximum(g_norm, 1e-12))
+    return tm.scale(grads, factor)
+
+
+def sgd_init(params, cfg: SGDConfig):
+    return {"mom": tm.zeros_like(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(forward_fn, loss_spec, cfg: SGDConfig, params, batch, state):
+    loss, metrics, grads = grad_and_loss(forward_fn, loss_spec, params, batch)
+    grads = _clip(grads, cfg.clip_norm)
+    mom = tm.axpy(cfg.momentum, state["mom"], grads)
+    new_params = tm.add(params, tm.cast_like(tm.scale(mom, -cfg.lr), params))
+    metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads))
+    return new_params, {"mom": mom, "step": state["step"] + 1}, metrics
+
+
+def adam_init(params, cfg: AdamConfig):
+    return {"m": tm.zeros_like(params), "v": tm.zeros_like(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(forward_fn, loss_spec, cfg: AdamConfig, params, batch, state):
+    loss, metrics, grads = grad_and_loss(forward_fn, loss_spec, params, batch)
+    grads = _clip(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * jnp.square(g),
+                     state["v"], grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    upd = jax.tree.map(
+        lambda mm, vv: -cfg.lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps),
+        m, v)
+    new_params = tm.add(params, tm.cast_like(upd, params))
+    metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads))
+    return new_params, {"m": m, "v": v, "step": step}, metrics

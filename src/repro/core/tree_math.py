@@ -1,0 +1,70 @@
+"""Pytree vector-space helpers used by the CG/NGHF machinery.
+
+All θ-sized quantities in the optimiser (gradients, conjugate directions,
+residuals, candidate updates) are pytrees mirroring the parameter tree;
+these helpers give them vector-space semantics.  Reductions are f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def add(a, b):
+    return tmap(lambda x, y: x + y, a, b)
+
+
+def sub(a, b):
+    return tmap(lambda x, y: x - y, a, b)
+
+
+def scale(a, s):
+    """s * a, preserving each leaf's dtype (an f32 traced scalar would
+    otherwise promote bf16 CG state to f32 and break scan carries)."""
+    return tmap(lambda x: jnp.asarray(s, x.dtype) * x, a)
+
+
+def axpy(alpha, x, y):
+    """alpha * x + y, result in y's dtype."""
+    return tmap(lambda xi, yi: (jnp.asarray(alpha, xi.dtype) * xi
+                                + yi.astype(xi.dtype)).astype(yi.dtype),
+                x, y)
+
+
+def vdot(a, b):
+    # NOT jnp.vdot: vdot ravels its operands and flattening a 2d-sharded
+    # leaf is inexpressible for GSPMD, which inserts a full all-gather
+    # (measured: 3 GiB f32 gathers per leaf per CG iteration on
+    # qwen2.5-3b; EXPERIMENTS.md §Perf iter 3).  Elementwise multiply +
+    # sum keeps the sharding and reduces with an all-reduce of partials.
+    leaves = tmap(lambda x, y: jnp.sum(x.astype(jnp.float32) *
+                                       y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(lambda x, y: x + y, leaves, jnp.float32(0.0))
+
+
+def norm(a):
+    return jnp.sqrt(vdot(a, a))
+
+
+def zeros_like(a):
+    return tmap(jnp.zeros_like, a)
+
+
+def mul(a, b):
+    return tmap(lambda x, y: x * y, a, b)
+
+
+def div(a, b):
+    return tmap(lambda x, y: x / jnp.asarray(y, x.dtype), a, b)
+
+
+def where(pred, a, b):
+    return tmap(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def cast_like(a, ref):
+    return tmap(lambda x, r: x.astype(r.dtype), a, ref)

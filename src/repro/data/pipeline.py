@@ -1,0 +1,71 @@
+"""Sharding-aware batching utilities.
+
+``shard_batch`` places a host-side batch against the mesh's data axes so
+jit-compiled steps consume pre-sharded global arrays (single-process here,
+but the code path is the multi-host one: ``jax.device_put`` with a
+``NamedSharding``).  ``Prefetcher`` overlaps host-side synthesis with
+device compute.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """Leading-axis data-parallel spec over every data-like mesh axis."""
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def shard_batch(batch, mesh: Mesh, spec: Optional[P] = None):
+    spec = spec if spec is not None else batch_pspec(mesh)
+
+    def place(x):
+        if hasattr(x, "ndim") and x.ndim >= 1:
+            return jax.device_put(x, NamedSharding(mesh, spec))
+        return x
+
+    return jax.tree.map(place, batch)
+
+
+class Prefetcher:
+    """Depth-k background prefetch of host-side batch synthesis.
+
+    A single worker thread runs ``make_batch(seed)`` for seed = 0, 1, ...
+    ahead of the consumer, bounded by ``depth`` outstanding batches.
+    """
+
+    def __init__(self, make_batch: Callable[[int], dict], depth: int = 2,
+                 num_batches: Optional[int] = None):
+        import queue
+
+        self.make_batch = make_batch
+        self.num_batches = num_batches
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        seed = 0
+        while not self._stop.is_set():
+            if self.num_batches is not None and seed >= self.num_batches:
+                self._q.put(None)
+                return
+            self._q.put(self.make_batch(seed))
+            seed += 1
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused CG vector update.
+
+One CG iteration's vector work (paper Alg. 1) is three memory-bound passes
+over θ-sized arrays:
+
+    x <- x + alpha * v
+    r <- r - alpha * Bv
+    rr = <r, r>
+
+Unfused, that's 5 HBM reads + 2 writes of θ; fused, 3 reads + 2 writes and
+the dot product rides along for free — a 1.4x traffic cut on the CG
+stage's vector phase (the matrix-free products dominate FLOPs, but on
+θ = 72 B parameters these AXPYs move ~1 TB/update unfused).
+
+Design: 1-D grid over VMEM-sized tiles of the flattened vectors; the rr
+partial sums land in a per-tile output reduced by the caller (exact f32
+tree reduction, deterministic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cg_kernel(alpha_ref, x_ref, v_ref, r_ref, bv_ref,
+               x_out_ref, r_out_ref, rr_ref):
+    alpha = alpha_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    bv = bv_ref[...].astype(jnp.float32)
+    x_new = x + alpha * v
+    r_new = r - alpha * bv
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    r_out_ref[...] = r_new.astype(r_out_ref.dtype)
+    rr_ref[0] = jnp.sum(r_new * r_new)
+
+
+def cg_fused_update(alpha, x, v, r, bv, *, block: int = 65536,
+                    interpret: bool = True):
+    """Flat f32/bf16 arrays (N,) -> (x_new, r_new, rr scalar)."""
+    (N,) = x.shape
+    pad = (-N) % block
+    if pad:
+        x, v, r, bv = (jnp.pad(a, (0, pad)) for a in (x, v, r, bv))
+    n_blocks = (N + pad) // block
+    alpha_arr = jnp.full((1,), alpha, jnp.float32)
+
+    x_new, r_new, rr = pl.pallas_call(
+        _cg_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N + pad,), x.dtype),
+            jax.ShapeDtypeStruct((N + pad,), r.dtype),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha_arr, x, v, r, bv)
+    return x_new[:N], r_new[:N], rr.sum()

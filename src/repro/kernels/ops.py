@@ -1,0 +1,41 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``use_pallas`` defaults to interpret-mode Pallas on CPU (the container has
+no TPU); on TPU runtimes set ``REPRO_PALLAS_COMPILED=1`` to run the
+compiled kernels.  Every wrapper has a pure-jnp fallback (ref.py) that is
+also what the distributed (GSPMD) model paths use — the kernels are the
+single-chip hot-spot implementations.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cg_fused import cg_fused_update as _cg_pallas
+from repro.kernels.lattice_fb import sausage_forward as _fb_pallas
+from repro.kernels.swa_attention import swa_attention as _swa_pallas
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+def swa_attention(q, k, v, window: int, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.swa_attention_ref(q, k, v, window)
+    return _swa_pallas(q, k, v, window, interpret=_interpret())
+
+
+def sausage_forward(scores, corr, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.sausage_forward_ref(scores, corr)
+    return _fb_pallas(scores, corr, interpret=_interpret())
+
+
+def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.cg_fused_update_ref(alpha, x, v, r, bv)
+    return _cg_pallas(alpha, x, v, r, bv, interpret=_interpret())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_attention_ref(q, k, v, window: int):
+    """q/k/v: (B,T,H,hd), kv heads already repeated.  Dense reference."""
+    B, T, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(T)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window - 1)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sausage_forward_ref(scores, corr):
+    """scores/corr: (B,S,A).  lax.scan reference of the sausage recursion."""
+    def per_utt(sc, co):
+        def step(carry, inp):
+            in_log, c_in = carry
+            row_s, row_c = inp
+            row = row_s + in_log
+            c_row = row_c + c_in
+            m = row.max()
+            z = jnp.exp(row - m).sum()
+            new_log = jnp.log(z) + m
+            w = jnp.exp(row - new_log)
+            return (new_log, jnp.sum(w * c_row)), (row, c_row)
+
+        (logz, cavg), (alpha, c_alpha) = jax.lax.scan(
+            step, (jnp.float32(0.0), jnp.float32(0.0)),
+            (sc.astype(jnp.float32), co.astype(jnp.float32)))
+        return alpha, c_alpha, logz, cavg
+
+    return jax.vmap(per_utt)(scores, corr)
+
+
+def cg_fused_update_ref(alpha, x, v, r, bv):
+    xf = x.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    rf = r.astype(jnp.float32)
+    bvf = bv.astype(jnp.float32)
+    x_new = (xf + alpha * vf).astype(x.dtype)
+    r_new = (rf - alpha * bvf).astype(r.dtype)
+    rr = jnp.sum((rf - alpha * bvf) ** 2)
+    return x_new, r_new, rr

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: sliding-window flash attention (forward).
+
+Used by the SWA/local-attention blocks (mixtral-8x22b, recurrentgemma-9b)
+and the beyond-paper long-context variant of the dense archs.  TPU-native
+design (not a CUDA port):
+
+  * grid = (batch*heads, num_q_blocks, num_window_blocks) — the innermost
+    grid axis walks the (window//qb + 1) KV blocks that can intersect the
+    sliding window of one q block; everything else is masked out, so HLO
+    FLOPs scale with the window, not the sequence.
+  * BlockSpec tiling: q/k/v/o tiles of (block, head_dim) resident in VMEM;
+    head_dim padded to the 128-lane register width by the caller (all
+    assigned archs have hd in {64, 128, 192, 256}).
+  * online softmax state (m, l, acc) lives in VMEM scratch across the
+    window-block axis (sequential innermost grid dimension on TPU).
+
+Validated against ``ref.sliding_window_attention_ref`` in interpret mode
+(CPU) over shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                block_q: int, block_kv: int, window: int, seq_len: int):
+    qi = pl.program_id(1)
+    wi = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(wi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # (bq, hd)
+    k = k_ref[...].astype(jnp.float32)                    # (bkv, hd)
+    v = v_ref[...].astype(jnp.float32)
+
+    # absolute positions of this q block and kv block
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    kv_block_ix = qi * block_q // block_kv - (nw - 1) + wi
+    k_pos = kv_block_ix * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(q.shape[-1]))
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window - 1) & (k_pos >= 0)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(wi == nw - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, window: int, *, block_q: int = 128,
+                  block_kv: int = 128, interpret: bool = True):
+    """q/k/v: (B, T, H, hd) with H == kv heads already repeated.
+
+    ``window`` and T must be multiples of the block sizes (callers pad).
+    Returns (B, T, H, hd).
+    """
+    B, T, H, hd = q.shape
+    assert T % block_q == 0 and window % block_kv == 0
+    nw = window // block_kv + 1
+    nq = T // block_q
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+
+    # kv block index for (bh, qi, wi); clamp into range, masking handles
+    # the out-of-window blocks.
+    def kv_index(bh, qi, wi):
+        ix = qi * block_q // block_kv - (nw - 1) + wi
+        return bh, jnp.clip(ix, 0, T // block_kv - 1), 0
+
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, block_q=block_q, block_kv=block_kv,
+                          window=window, seq_len=T),
+        grid=(B * H, nq, nw),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda bh, qi, wi: (bh, qi, 0)),
+            pl.BlockSpec((None, block_kv, hd), kv_index),
+            pl.BlockSpec((None, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd),
+                               lambda bh, qi, wi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

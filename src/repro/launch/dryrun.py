@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first initialisation).  Do not move them.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, get_config, list_archs  # noqa: E402
+from repro.core.nghf import SecondOrderConfig                      # noqa: E402
+from repro.launch.hlo_analysis import analyze as analyze_hlo       # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+from repro.launch.sharding import input_shardings, param_shardings  # noqa: E402
+from repro.launch.steps import (build_prefill_step, build_serve_step,  # noqa: E402
+                                build_train_step)
+from repro.models.registry import get_model                        # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the REAL step function — the NGHF train step for train_4k, the
+prefill forward for prefill_32k, the single-token serve step for
+decode_32k / long_500k — against ShapeDtypeStruct stand-ins (no memory is
+allocated) and records:
+
+  * memory_analysis()   — per-device argument/temp/output bytes (fits-HBM proof)
+  * cost_analysis()     — per-device HLO FLOPs & bytes accessed
+  * collective bytes    — parsed from the compiled HLO, per collective kind
+
+into results/dryrun/<arch>__<shape>__<mesh>.json, which §Roofline and the
+benchmark suite consume.
+"""
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+                "pred": 1}
+_COLL_RE = re.compile(
+    r"%(\S+) = .*?\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(([^)]*)\)")
+_DEF_RE = re.compile(r"%(\S+) = ((?:\([^=]*\))|(?:\S+\[[0-9,]*\]\S*))")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt[:4].rstrip("["), 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, per kind.
+
+    Operand shapes are resolved through a name -> type table built from all
+    instruction definitions (operands are printed by name in compiled HLO).
+    """
+    sizes = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            sizes[m.group(1)] = _bytes_of_type(m.group(2))
+    out = {}
+    counts = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        name, kind, operands = m.groups()
+        b = 0
+        for op in operands.split(","):
+            op = op.strip()
+            # operands may be "%name" or "bf16[...] %name"
+            if "[" in op:
+                b += _bytes_of_type(op)
+            else:
+                b += sizes.get(op.lstrip("%"), 0)
+        if b == 0:
+            b = sizes.get(name, 0)       # fall back to output size
+        out[kind] = out.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = counts
+    return out
+
+
+def _fsdp_ctx(cfg: ArchConfig, mesh):
+    """Register FSDP gathering (2d params) + sequence-parallel activation
+    sharding for distributed lowering."""
+    import contextlib
+
+    from repro.launch import fsdp
+    stack = contextlib.ExitStack()
+    if cfg.param_sharding == "2d":
+        stack.enter_context(fsdp.compute_specs(fsdp.make_spec_fn(cfg, mesh)))
+    if cfg.param_sharding != "replicated":
+        stack.enter_context(
+            fsdp.activation_sharding(fsdp.make_activation_sharding(mesh)))
+    return stack
+
+
+def _step_and_args(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns (fn, arg_specs, in_shardings) for the combo."""
+    model = get_model(cfg)
+    shp = INPUT_SHAPES[shape_name]
+    specs = model.input_specs(shape_name)
+    pshapes = model.param_shapes()
+    pshard = param_shardings(cfg, mesh, pshapes)
+    if shp.mode == "train":
+        # bf16 CG-vector storage for the very large archs: halves θ-state
+        # memory; the paper's Sec. 4.2 rescaling is what keeps low-precision
+        # curvature products usable (beyond-paper optimisation, §Perf).
+        state_dtype = "bfloat16" if cfg.d_model >= 4096 else "float32"
+        # CG batch = global_batch/16 (the paper's CG batch is ~2% of the
+        # gradient batch: 0.5 h vs 25 h) and candidate evaluation every
+        # 2nd iteration (Sec. 7: the check "can be performed less
+        # frequently") — §Perf hillclimb 2.
+        mb = 8 if cfg.d_model >= 6144 else (4 if (cfg.d_model >= 4096 or cfg.num_experts >= 16) else 1)
+        socfg = SecondOrderConfig(method="nghf", cg_iters=8, ng_iters=4,
+                                  state_dtype=state_dtype, eval_every=2,
+                                  grad_microbatches=mb)
+        fn = build_train_step(cfg, socfg, cg_frac=16,
+                              min_cg=mesh.devices.size // mesh.shape["model"],
+                              state_sharding=pshard)
+        ishard = input_shardings(cfg, mesh, specs)
+        return fn, (pshapes, specs), (pshard, ishard)
+    if shp.mode == "prefill":
+        fn = build_prefill_step(cfg)
+        ishard = input_shardings(cfg, mesh, specs)
+        return fn, (pshapes, specs), (pshard, ishard)
+    # decode
+    long_mode = shape_name == "long_500k"
+    fn0 = build_serve_step(cfg, long_mode=long_mode)
+    cache = specs["cache"]
+    ishard = input_shardings(cfg, mesh, specs)
+
+    def fn(params, cache, tokens, pos):
+        return fn0(params, cache, tokens, pos)
+
+    return fn, (pshapes, cache, specs["tokens"], specs["pos"]), \
+        (pshard, ishard["cache"], ishard["tokens"], ishard["pos"])
+
+
+def applicable(cfg: ArchConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.supports_long_context and cfg.decode_capable
+    if INPUT_SHAPES[shape_name].mode == "decode":
+        return cfg.decode_capable
+    return True
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               write: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "skipped"}
+    if not applicable(cfg, shape_name):
+        rec["reason"] = "inapplicable (see DESIGN.md long_500k policy)"
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_shardings = _step_and_args(cfg, shape_name, mesh)
+        # outputs: new params keep the storage sharding; metrics replicated
+        out_shardings = None
+        if INPUT_SHAPES[shape_name].mode == "train":
+            out_shardings = (in_shardings[0], None)
+        elif INPUT_SHAPES[shape_name].mode == "decode":
+            out_shardings = (None, in_shardings[1])
+        with mesh, _fsdp_ctx(cfg, mesh):
+            lowered = jax.jit(fn, in_shardings=in_shardings,
+                              out_shardings=out_shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        txt = compiled.as_text()
+        # trip-count-weighted roofline inputs (launch/hlo_analysis.py);
+        # raw cost_analysis is kept for reference but counts scanned loop
+        # bodies only once.
+        weighted = analyze_hlo(txt)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={k: int(getattr(mem, k)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes")},
+            flops=weighted["flops"],
+            bytes_accessed=weighted["bytes_accessed"],
+            collectives=dict(weighted["collectives"],
+                             total=weighted["collective_bytes"],
+                             counts=weighted["collective_counts"]),
+            raw_cost={"flops": float(cost.get("flops", -1)),
+                      "bytes_accessed": float(cost.get("bytes accessed", -1))},
+            num_devices=int(mesh.devices.size),
+        )
+        if verbose:
+            print(f"[ok] {arch} {shape_name} {mesh_name}: "
+                  f"flops/dev={rec['flops']:.3e} "
+                  f"temp/dev={rec['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
+                  f"args/dev={rec['memory']['argument_size_in_bytes']/2**30:.2f}GiB "
+                  f"coll={rec['collectives']['total']/2**30:.3f}GiB "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR] {arch} {shape_name} {mesh_name}: {e}")
+    if write:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR,
+                            f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id (or 'all')")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+    archs = list_archs() if args.arch in (None, "all") else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape is None else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(dryrun_one(arch, shape, multi_pod=mp))
+    ok = sum(r["status"] == "ok" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    skip = sum(r["status"] == "skipped" for r in results)
+    print(f"\ndry-run: {ok} ok, {err} error, {skip} skipped "
+          f"(of {len(results)})")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

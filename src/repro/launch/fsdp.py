@@ -1,0 +1,164 @@
+"""Explicit FSDP gather semantics for 2d-sharded parameters.
+
+Storing parameters (and θ-sized CG state) sharded over BOTH mesh axes
+("2d": model x data) is mandatory for the largest assigned archs
+(mixtral-8x22b bf16 = 282 GB > 16 GB/chip with model-only sharding).  But
+naively letting GSPMD consume 2d-sharded weights in a data-parallel matmul
+is catastrophic: the contracting dim of W is sharded over "data" while the
+activation batch is too, so GSPMD all-gathers the ACTIVATIONS over "data"
+(measured on qwen2.5-3b train_4k: 3.4x FLOPs and 1.1 TB/dev collectives vs
+1d — EXPERIMENTS.md §Perf iter 1/H2).
+
+The fix is classic FSDP: explicitly re-shard each layer's weights to their
+1d (tensor-parallel only) spec at the point of use — an all-gather of
+~190 MB of bf16 per layer — so the matmuls see 1d weights and stay batch-
+parallel.  The transpose of that constraint in the backward pass is the
+FSDP reduce-scatter of the gradients.  Model code calls ``gather_for_
+compute`` inside each scan body; the step builders register the spec
+function here when cfg.param_sharding == "2d" (a context registry keeps
+model code mesh-agnostic: with nothing registered it is the identity, so
+tests and CPU paths are untouched).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_SPEC_FN: contextvars.ContextVar[Optional[Callable]] = \
+    contextvars.ContextVar("fsdp_spec_fn", default=None)
+
+
+@contextlib.contextmanager
+def compute_specs(spec_fn: Callable):
+    """spec_fn(path_keys, leaf) -> NamedSharding | None (None = leave)."""
+    token = _SPEC_FN.set(spec_fn)
+    try:
+        yield
+    finally:
+        _SPEC_FN.reset(token)
+
+
+def gather_for_compute(tree, compute_dtype=None):
+    """Constrain every leaf to its registered compute (1d) sharding.
+
+    Float leaves are cast to ``compute_dtype`` BEFORE the constraint so the
+    all-gather moves bf16, not f32 master weights.  Identity when no spec
+    function is registered.
+    """
+    spec_fn = _SPEC_FN.get()
+    if spec_fn is None:
+        return tree
+
+    def per_leaf(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        x = leaf
+        # Only matrices are cast before the gather (move bf16, not f32);
+        # vectors (norm scales, biases) stay f32 master precision.
+        if (compute_dtype is not None and x.ndim >= 2
+                and jnp.issubdtype(x.dtype, jnp.floating)):
+            x = x.astype(compute_dtype)
+        sharding = spec_fn(keys, x)
+        if sharding is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+_ACT_SPEC: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_spec", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding):
+    """Register a NamedSharding for the (B, T, d) residual stream."""
+    token = _ACT_SPEC.set(sharding)
+    try:
+        yield
+    finally:
+        _ACT_SPEC.reset(token)
+
+
+def constrain_activations(x):
+    """Sequence-parallel constraint on the residual stream.
+
+    Applied to the layer-scan carry so the remat-saved per-period residual
+    stack is sharded (B over data axes, T over "model").  Without it the
+    stack is replicated over "model" AND XLA's loop-invariant-code-motion
+    hoists a whole-stack bf16->f32 convert out of the backward loop:
+    9 + 18 GiB/dev measured on qwen2.5-3b train_4k (§Perf iter 2).  With
+    T/16 sharding both shrink 16x; GSPMD inserts the Megatron-SP style
+    all-gathers at the attention/MLP boundaries.
+    """
+    sharding = _ACT_SPEC.get()
+    if sharding is None or x.ndim < 3:
+        return x
+    mesh = sharding.mesh
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if x.shape[1] % mesh.shape["model"] or x.shape[0] % dp:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def make_activation_sharding(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return NamedSharding(mesh, P(dp if dp else None, "model", None))
+
+
+def unshard_seq(x):
+    """Megatron-SP entry gather: re-replicate the T dim at block entry so
+    the block's matmuls run tensor-parallel with SHARDED weights.  Without
+    this, a T-sharded x makes GSPMD prefer gathering the (larger set of)
+    weights to full size per layer instead (§Perf iter 4)."""
+    sharding = _ACT_SPEC.get()
+    if sharding is None or x.ndim < 3:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = sharding.mesh
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    if x.shape[0] % dp:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp_axes if dp_axes else None, None, None)))
+
+
+def constrain_vocab_matrix(x):
+    """Constrain a (d, V) head matrix (or its cotangent accumulator) to
+    P(None, "model").  Without it the chunked-CE backward accumulates the
+    head cotangent as a FULL (d, V) f32 scan carry (4.6 GiB on
+    qwen2-72b/minitron; §Perf iter 5)."""
+    sharding = _ACT_SPEC.get()
+    if sharding is None or x.ndim != 2:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = sharding.mesh
+    if x.shape[-1] % mesh.shape["model"]:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, "model")))
+
+
+def make_spec_fn(cfg, mesh):
+    """Compute-time (1d) specs for a 2d-stored parameter tree."""
+    from jax.sharding import NamedSharding
+
+    from repro.launch.sharding import param_pspec
+
+    cfg_1d = cfg.replace(param_sharding="1d")
+
+    def spec_fn(path_keys, leaf):
+        spec = param_pspec(cfg_1d, mesh, path_keys, leaf.shape, stacked=False)
+        return NamedSharding(mesh, spec)
+
+    return spec_fn

@@ -1,0 +1,40 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialisation).
+
+Single pod:  (16, 16)    axes ("data", "model")      — 256 chips (TPU v5e)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+"pod" is a second data-parallel axis: the NGHF gradient batch is sharded
+over pod x data, so the gradient-accumulation all-reduce crosses the
+(slow) pod interconnect exactly once per update — the paper's synchronous
+master/worker accumulation at pod scale.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py sets this)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many devices exist (CPU tests)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

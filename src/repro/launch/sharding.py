@@ -1,0 +1,223 @@
+"""Per-architecture sharding rules.
+
+Rules are keyed on (leaf name, ndim) — leaf names in the model zoo are
+stable (see models/layers.py).  Three regimes per ArchConfig.param_sharding:
+
+  "replicated" — everything replicated (small models, CPU smoke tests)
+  "1d"         — tensor parallel over "model" only
+  "2d"         — tensor parallel over "model" + FSDP-style sharding of the
+                 complementary matrix dim over "data" (needed for >=8B
+                 params: mixtral-8x22b at bf16 is 282 GB, > 16 GB/chip HBM
+                 with model-only sharding)
+
+Every rule is divisibility-guarded: an axis that does not divide the dim is
+dropped (e.g. kv-head projections with num_kv_heads < mesh model size are
+replicated; granite's 49155 vocab is replicated).  The SAME specs are used
+for parameters and for every θ-sized CG/optimiser vector (Δθ, r, v, Bv),
+so second-order state never exceeds the parameter sharding footprint.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _guard(dim: int, axis, mesh: Mesh):
+    """axis may be a name or a tuple of names (product extent)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        axes = tuple(a for a in axis if a in mesh.axis_names)
+        if not axes:
+            return None
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim % size:
+            # fall back to the largest single axis that divides
+            for a in axes:
+                if dim % mesh.shape[a] == 0:
+                    return a
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    if axis not in mesh.axis_names:
+        return None
+    return axis if dim % mesh.shape[axis] == 0 else None
+
+
+def _spec(mesh, shape, *axes) -> P:
+    """Build a PartitionSpec dropping non-divisible axes."""
+    return P(*[_guard(d, a, mesh) for d, a in zip(shape, axes)])
+
+
+def param_pspec(cfg: ArchConfig, mesh: Mesh, path_keys, shape, *,
+                stacked: bool = True) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked=True``: leaves under ``periods/slotN`` carry a leading
+    n_periods dim (storage layout).  Inside a scan body the slice has no
+    such dim — fsdp.make_spec_fn passes stacked=False.
+    """
+    if cfg.param_sharding == "replicated" or "model" not in mesh.axis_names:
+        return P()
+    # scan-over-layers stacks per-period params with a leading n_periods
+    # dim: spec the un-stacked shape, then prepend None.
+    if stacked and any(k.startswith("slot") for k in path_keys):
+        inner = param_pspec(cfg, mesh, [k for k in path_keys
+                                        if not k.startswith("slot")] or
+                            path_keys[-1:], shape[1:])
+        return P(None, *inner)
+    name = path_keys[-1]
+    two_d = cfg.param_sharding == "2d"
+    # FSDP/ZeRO axis: include "pod" when present so multi-pod meshes shard
+    # θ-state over all 512 chips (mixtral-8x22b's second-order state does
+    # not fit 256 chips otherwise; §Perf hillclimb 3).
+    dat = (("pod", "data") if "pod" in mesh.axis_names else "data") \
+        if two_d else None
+    nd = len(shape)
+
+    # embeddings / head / positions — vocab over "model" ONLY (never
+    # "data"): token-gather from a d-sharded table makes GSPMD all-gather
+    # the full table per use (4.6 GiB f32 on qwen2-72b; §Perf iter 4).
+    if name == "table":                      # (V, d)
+        return _spec(mesh, shape, "model", None)
+    if name == "lm_head":                    # (d, V)
+        return _spec(mesh, shape, None, "model")
+    if name == "dec_pos":                    # (P, d)
+        return _spec(mesh, shape, "model", None)
+
+    # attention ----------------------------------------------------------------
+    if name == "wq":
+        return _spec(mesh, shape, dat, "model")
+    if name in ("wk", "wv"):                 # (d, K*hd): shard kv heads only
+        kv_ax = "model" if (cfg.num_kv_heads % _axis_size(mesh, "model") == 0) else None
+        return _spec(mesh, shape, dat, kv_ax)
+    if name == "wo":
+        return _spec(mesh, shape, "model", dat)
+    if name == "bq":
+        return _spec(mesh, shape, "model")
+    if name in ("bk", "bv"):
+        kv_ax = "model" if (cfg.num_kv_heads % _axis_size(mesh, "model") == 0) else None
+        return _spec(mesh, shape, kv_ax)
+
+    # FFN / MoE ------------------------------------------------------------------
+    if name in ("w_in", "w_gate"):
+        if nd == 3:                          # MoE (E, d, ff)
+            if shape[0] % _axis_size(mesh, "model") == 0:
+                return _spec(mesh, shape, "model", dat, None)
+            return _spec(mesh, shape, None, dat, "model")
+        return _spec(mesh, shape, dat, "model")
+    if name == "w_out":
+        if nd == 3:                          # MoE (E, ff, d)
+            if shape[0] % _axis_size(mesh, "model") == 0:
+                return _spec(mesh, shape, "model", None, dat)
+            return _spec(mesh, shape, None, "model", dat)
+        return _spec(mesh, shape, "model", dat)
+    if name == "router":                     # (d, E)
+        return P()
+
+    # recurrent blocks -------------------------------------------------------
+    if name in ("w_x", "w_y", "w_up"):       # (d, inner)
+        return _spec(mesh, shape, dat, "model")
+    if name in ("w_down",):                  # (inner, d)
+        return _spec(mesh, shape, "model", dat)
+    if name in ("w_q", "w_k", "w_v"):        # mLSTM (inner, inner)
+        return _spec(mesh, shape, dat, "model")
+    if name == "w_if":                       # (inner, 2H)
+        return _spec(mesh, shape, "model", None)
+    if name in ("w_input_gate", "w_rec_gate"):   # (rg, rg)
+        return _spec(mesh, shape, dat, "model")
+    if name == "conv_w":                     # (K, C)
+        return _spec(mesh, shape, None, "model")
+    if name == "w_zifo":                     # (d, 4d)
+        return _spec(mesh, shape, dat, "model")
+    if name == "r_zifo":                     # (4, H, hd, hd)
+        h_ax = "model" if shape[1] % _axis_size(mesh, "model") == 0 else None
+        return _spec(mesh, shape, None, h_ax, None, None)
+
+    # norms, biases, gains ----------------------------------------------------
+    return P()
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shapes):
+    """Tree of NamedSharding matching a params (or θ-sized vector) tree."""
+
+    def per_leaf(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return NamedSharding(mesh, param_pspec(cfg, mesh, keys, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def data_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def batch_pspec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
+    dp = data_axes(mesh)
+    return P(dp if batch_divisible else None, *([None] * (ndim - 1)))
+
+
+def input_shardings(cfg: ArchConfig, mesh: Mesh, specs):
+    """Shardings for the input_specs() tree (tokens/labels/cache/...)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in (dp or ()):
+        dp_size *= mesh.shape[a]
+
+    def build(shape, placements: dict):
+        """placements: {negative_dim_index: axis_name}; guards applied.
+        Cache leaves under scanned periods carry a leading stack dim, so
+        all placements are right-relative."""
+        spec = [None] * len(shape)
+        for rix, ax in placements.items():
+            if len(shape) + rix < 0:
+                continue
+            if ax == "__data__":
+                if shape[rix] % dp_size == 0 and dp is not None:
+                    spec[rix] = dp
+            else:
+                spec[rix] = _guard(shape[rix], ax, mesh)
+        return NamedSharding(mesh, P(*spec))
+
+    def per_leaf(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v"):
+            # KV caches (..., B, S, K, hd): batch over data axes, slots over
+            # "model" (flash-decode style sequence sharding; the decode
+            # softmax reductions become all-reduces over "model").
+            return build(shape, {-4: "__data__", -3: "model"})
+        if name == "state":                   # RG-LRU (..., B, rg)
+            return build(shape, {-2: "__data__", -1: "model"})
+        if name == "conv":                    # (..., B, K-1, C)
+            return build(shape, {-3: "__data__", -1: "model"})
+        if name == "C":                       # mLSTM (..., B, H, hd, hd)
+            return build(shape, {-4: "__data__", -2: "model"})
+        if name in ("n", "c", "h"):           # (..., B, H, hd)
+            return build(shape, {-3: "__data__", -1: "model"})
+        if name == "m":                       # ambiguous (B,H)/(B,H,hd):
+            return build(shape, {})           # replicate (tiny)
+        if name in ("enc_out", "encoder_input"):
+            return build(shape, {-3: "__data__"})
+        # tokens / labels / pos / misc: leading batch dim over data axes
+        return build(shape, {-len(shape): "__data__"})
+
+    return jax.tree_util.tree_map_with_path(per_leaf, specs)

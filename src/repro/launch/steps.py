@@ -1,0 +1,140 @@
+"""Step builders: the jitted functions that the trainer, server, and
+multi-pod dry-run lower.
+
+  * ``build_train_step``   — one FULL NGHF update (gradient accumulation on
+    the global batch + inner Fisher-CG + outer GN-CG with candidate
+    selection on a CG sub-batch), as a single jitted function.  Under pjit
+    the batch means become all-reduces over (pod, data) — the paper's
+    Fig. 1 distributed scheme.
+  * ``build_sgd_step`` / ``build_adam_step`` — first-order baselines.
+  * ``build_prefill_step`` — sequence forward returning last-position
+    logits only (never materialises (B, T, V)).
+  * ``build_serve_step``   — ONE new token against a seq_len KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.nghf import SecondOrderConfig, second_order_update
+from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
+                                   adam_update, sgd_init, sgd_update)
+from repro.losses.chunked_lm import ChunkedCELoss
+from repro.models.registry import get_model
+
+
+def _lm_forward(cfg: ArchConfig, model):
+    """forward returning (hidden, head) + scaled aux, for ChunkedCELoss."""
+    from repro.launch import fsdp
+
+    def fwd(params, batch):
+        hidden, aux = model.forward_hidden(params, batch)
+        # gather the sequence dim ONCE (bf16) before the chunked loss:
+        # its traced dynamic_slice over a T-sharded hidden otherwise makes
+        # GSPMD materialise a full f32 copy per chunk (§Perf hillclimb 2).
+        hidden = fsdp.unshard_seq(hidden)
+        return (hidden, model.head_matrix(params)), cfg.router_aux_coef * aux
+
+    return fwd
+
+
+def _scalar_metrics(metrics: dict) -> dict:
+    """Keep scalar diagnostics only (dry-run outputs stay tiny)."""
+    out = {}
+    for k, v in metrics.items():
+        if hasattr(v, "ndim") and v.ndim == 0:
+            out[k] = v
+    return out
+
+
+def cg_sub_batch(batch: dict, frac: int, min_size: int):
+    """Static slice of the leading batch dim — the paper's (much smaller)
+    CG batch.  Keeps divisibility by the data-parallel extent."""
+    B = batch["tokens"].shape[0]
+    nb = max(B // frac, min_size)
+
+    def slc(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == B:
+            return x[:nb]
+        return x
+
+    return jax.tree.map(slc, batch)
+
+
+def build_train_step(cfg: ArchConfig, socfg: SecondOrderConfig,
+                     *, cg_frac: int = 8, min_cg: int = 1,
+                     state_sharding=None) -> Callable:
+    model = get_model(cfg)
+    loss = ChunkedCELoss()
+    fwd = _lm_forward(cfg, model)
+
+    def train_step(params, batch):
+        lm_batch = dict(batch)
+        if "labels" not in lm_batch:
+            lm_batch["labels"] = lm_batch["tokens"]
+        cg_batch = cg_sub_batch(lm_batch, cg_frac, min_cg)
+        new_params, metrics = second_order_update(
+            fwd, loss, socfg, params, lm_batch, cg_batch, share_counts=None,
+            state_sharding=state_sharding)
+        return new_params, _scalar_metrics(metrics)
+
+    return train_step
+
+
+def build_sgd_step(cfg: ArchConfig, opt: SGDConfig):
+    model = get_model(cfg)
+    loss = ChunkedCELoss()
+    fwd = _lm_forward(cfg, model)
+
+    def step(params, opt_state, batch):
+        b = dict(batch)
+        if "labels" not in b:
+            b["labels"] = b["tokens"]
+        new_params, new_state, metrics = sgd_update(fwd, loss, opt, params, b,
+                                                    opt_state)
+        return new_params, new_state, _scalar_metrics(metrics)
+
+    return step, partial(sgd_init, cfg=opt)
+
+
+def build_adam_step(cfg: ArchConfig, opt: AdamConfig):
+    model = get_model(cfg)
+    loss = ChunkedCELoss()
+    fwd = _lm_forward(cfg, model)
+
+    def step(params, opt_state, batch):
+        b = dict(batch)
+        if "labels" not in b:
+            b["labels"] = b["tokens"]
+        new_params, new_state, metrics = adam_update(fwd, loss, opt, params, b,
+                                                     opt_state)
+        return new_params, new_state, _scalar_metrics(metrics)
+
+    return step, partial(adam_init, cfg=opt)
+
+
+def build_prefill_step(cfg: ArchConfig):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        hidden, _ = model.forward_hidden(params, batch)
+        last = hidden[:, -1:]
+        logits = last @ model.head_matrix(params).astype(last.dtype)
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig, *, long_mode: bool = False):
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos,
+                                              long_mode=long_mode)
+        return logits, new_cache
+
+    return serve_step

@@ -1,0 +1,178 @@
+"""Vocab-chunked LM cross-entropy with matched curvature factors.
+
+For the assigned LLM architectures the full logits tensor (B, T, V) is
+enormous (minitron train_4k: 256 x 4096 x 256000 x 4B ≈ 1 PB) — it must
+never be materialised.  This LossSpec therefore works on the *pre-head*
+output ``out = (hidden (B,T,d), head (d,V))`` and streams the LM head +
+softmax over T-chunks with ``lax.scan``.
+
+The curvature factors are the exact CE/matching-loss factors pushed
+through the head:  for per-frame logits a = hW,
+    GN:     u=(u_h,u_W) -> ja = u_h W + h u_W ;  ĥa = w (p⊙ja − p(pᵀja))
+            cotangents: (ĥa Wᵀ,  hᵀ ĥa)
+    Fisher: ĝ = w (p − y) ;  f̂a = S ĝ (ĝᵀ ja) ; same pull-back.
+This keeps the LM head INSIDE the Gauss-Newton/Fisher Jacobian (unlike a
+hidden-state-only GN), matching the paper's whole-network curvature.
+
+Because ``make_curvature_ops`` is agnostic to what the forward returns,
+this spec plugs into the same NGHF machinery as the dense-logit losses.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import fsdp
+
+
+def _chunks(T: int, t_chunk: int) -> int:
+    t_chunk = min(t_chunk, T)
+    while T % t_chunk:
+        t_chunk -= 1
+    return t_chunk
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ce_core(hidden, W, labels, t_chunk: int):
+    """Sum of token NLLs, streamed over T chunks.
+
+    custom_vjp so the backward (a) recomputes per-chunk softmaxes instead
+    of saving them and (b) accumulates the head cotangent under an
+    explicit vocab-sharding constraint — autodiff's scan-transpose carries
+    it as a FULL (d, V) f32 array otherwise (§Perf iter 5).  Reverse-mode
+    only; the NGHF curvature JVPs differentiate the *model*, never this
+    loss value, so forward-mode is not needed here.
+    """
+    tc = _chunks(hidden.shape[1], t_chunk)
+    n = hidden.shape[1] // tc
+
+    def body(nll, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * tc, tc, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * tc, tc, axis=1)
+        a = (h @ W.astype(h.dtype)).astype(jnp.float32)
+        lp = jax.nn.log_softmax(a, -1)
+        nll = nll + (-jnp.take_along_axis(lp, y[..., None], -1)).sum()
+        return nll, None
+
+    nll, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n))
+    return nll
+
+
+def _ce_core_fwd(hidden, W, labels, t_chunk):
+    return _ce_core(hidden, W, labels, t_chunk), (hidden, W, labels)
+
+
+def _ce_core_bwd(t_chunk, res, ct):
+    hidden, W, labels = res
+    tc = _chunks(hidden.shape[1], t_chunk)
+    n = hidden.shape[1] // tc
+    Wc = W.astype(hidden.dtype)
+
+    def body(carry, i):
+        cot_h, cot_W = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * tc, tc, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * tc, tc, axis=1)
+        a = (h @ Wc).astype(jnp.float32)
+        g = (jax.nn.softmax(a, -1)
+             - jax.nn.one_hot(y, a.shape[-1], dtype=jnp.float32)) * ct
+        ch = (g.astype(hidden.dtype) @ Wc.T)
+        cot_h = jax.lax.dynamic_update_slice_in_dim(cot_h, ch, i * tc, axis=1)
+        cot_W = cot_W + jnp.einsum("btd,btv->dv", h.astype(jnp.float32), g)
+        cot_W = fsdp.constrain_vocab_matrix(cot_W)
+        return (cot_h, cot_W), None
+
+    init = (jnp.zeros_like(hidden),
+            fsdp.constrain_vocab_matrix(jnp.zeros(W.shape, jnp.float32)))
+    (cot_h, cot_W), _ = jax.lax.scan(body, init, jnp.arange(n))
+    return cot_h, cot_W.astype(W.dtype), None
+
+
+_ce_core.defvjp(_ce_core_fwd, _ce_core_bwd)
+
+
+class ChunkedCELoss:
+    """out = (hidden (B,T,d), head (d,V)); batch["labels"]: (B,T)."""
+
+    name = "chunked_ce"
+
+    def __init__(self, t_chunk: int = 256):
+        self.t_chunk = t_chunk
+
+    def _scan(self, out, batch, body, init):
+        hidden, W = out
+        B, T, d = hidden.shape
+        tc = _chunks(T, self.t_chunk)
+        n = T // tc
+        labels = batch["labels"]
+
+        def outer(carry, i):
+            h = jax.lax.dynamic_slice_in_dim(hidden, i * tc, tc, axis=1)
+            y = jax.lax.dynamic_slice_in_dim(labels, i * tc, tc, axis=1)
+            return body(carry, h, y, i), None
+
+        carry, _ = jax.lax.scan(outer, init, jnp.arange(n))
+        return carry
+
+    # --- loss ---------------------------------------------------------------
+    def value(self, out, batch) -> Tuple[jnp.ndarray, dict]:
+        hidden, W = out
+        B, T, _ = hidden.shape
+        N = B * T
+        nll = _ce_core(hidden, W, batch["labels"], self.t_chunk)
+
+        # accuracy: gradient-free streamed argmax
+        def body(correct, h, y, i):
+            a = jax.lax.stop_gradient(h) @ jax.lax.stop_gradient(
+                W.astype(h.dtype))
+            return correct + jnp.sum(jnp.argmax(a, -1) == y)
+
+        correct = self._scan(out, batch, body, jnp.int32(0))
+        loss = nll / N
+        return loss, {"ce": loss, "acc": correct.astype(jnp.float32) / N}
+
+    # --- curvature factors ----------------------------------------------------
+    def _factor(self, out, batch, u, kind: str):
+        hidden, W = out
+        u_h, u_W = u
+        B, T, d = hidden.shape
+        N = B * T
+        w = 1.0 / N
+        tc = _chunks(T, self.t_chunk)
+        n = T // tc
+
+        def body(carry, i):
+            cot_h, cot_W = carry
+            h = jax.lax.dynamic_slice_in_dim(hidden, i * tc, tc, axis=1)
+            uh = jax.lax.dynamic_slice_in_dim(u_h, i * tc, tc, axis=1)
+            y = jax.lax.dynamic_slice_in_dim(batch["labels"], i * tc, tc, axis=1)
+            hf = h.astype(jnp.float32)
+            a = hf @ W.astype(jnp.float32)
+            ja = uh.astype(jnp.float32) @ W.astype(jnp.float32) \
+                + hf @ u_W.astype(jnp.float32)
+            p = jax.nn.softmax(a, -1)
+            if kind == "gn":
+                pu = jnp.sum(p * ja, -1, keepdims=True)
+                fa = w * (p * ja - p * pu)
+            else:  # empirical Fisher, S = N atoms
+                g = w * (p - jax.nn.one_hot(y, a.shape[-1], dtype=jnp.float32))
+                gu = jnp.sum(g * ja, -1, keepdims=True)
+                fa = N * g * gu
+            ch = (fa @ W.astype(jnp.float32).T).astype(hidden.dtype)
+            cot_h = jax.lax.dynamic_update_slice_in_dim(cot_h, ch, i * tc, axis=1)
+            cot_W = cot_W + jnp.einsum("btd,btv->dv", hf, fa)
+            cot_W = fsdp.constrain_vocab_matrix(cot_W)
+            return (cot_h, cot_W), None
+
+        init = (jnp.zeros_like(hidden),
+                fsdp.constrain_vocab_matrix(jnp.zeros(W.shape, jnp.float32)))
+        (cot_h, cot_W), _ = jax.lax.scan(body, init, jnp.arange(n))
+        return cot_h, cot_W.astype(W.dtype)
+
+    def gn_vp(self, out, batch, u):
+        return self._factor(out, batch, u, "gn")
+
+    def fisher_vp(self, out, batch, u):
+        return self._factor(out, batch, u, "fisher")

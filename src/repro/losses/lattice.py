@@ -1,0 +1,119 @@
+"""Packed word/phone lattices for discriminative sequence training.
+
+A lattice is a DAG of arcs; each arc spans frames [start_t, end_t) and
+carries one HMM-state / DNN-output label (state-level arc granularity), a
+language/transition score, and a correctness count against the reference
+(for MBR/MPE).  All per-utterance tensors are padded to a static number of
+arcs ``A`` with ``arc_mask`` so batches stack and shard cleanly.
+
+No MGB data ships with this container (see DESIGN.md assumption log), so a
+synthetic *sausage* generator produces confusion-network-style lattices:
+the utterance is segmented; each segment has ``n_alt`` competing arcs (one
+of which is the reference label); consecutive segments are fully connected.
+This exercises every part of the forward-backward machinery (multiple
+predecessors/successors, correctness accumulation, final-arc reduction).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class Lattice(NamedTuple):
+    """Batched packed lattice.  Leading dim B on every field."""
+
+    start_t: jnp.ndarray      # (B, A) int32, arc start frame
+    end_t: jnp.ndarray        # (B, A) int32, arc end frame (exclusive)
+    label: jnp.ndarray        # (B, A) int32, DNN output unit of the arc
+    lm: jnp.ndarray           # (B, A) f32, language/transition log score
+    corr: jnp.ndarray         # (B, A) f32, raw correctness count of the arc
+    preds: jnp.ndarray        # (B, A, P) int32, predecessor arc ids (-1 pad)
+    succs: jnp.ndarray        # (B, A, S) int32, successor arc ids (-1 pad)
+    is_start: jnp.ndarray     # (B, A) bool
+    is_final: jnp.ndarray     # (B, A) bool
+    arc_mask: jnp.ndarray     # (B, A) bool, valid arcs
+    ref_states: jnp.ndarray   # (B, T) int32, reference state alignment
+    num_ref_units: jnp.ndarray  # (B,) f32, #reference phones (normaliser)
+
+    @property
+    def num_arcs(self):
+        return self.start_t.shape[-1]
+
+    @property
+    def num_frames(self):
+        return self.ref_states.shape[-1]
+
+
+def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
+                         num_states: int, seg_len: int = 4, n_alt: int = 3,
+                         max_arcs: int | None = None) -> dict:
+    """Generate one synthetic sausage lattice as numpy arrays (unbatched)."""
+    n_seg = num_frames // seg_len
+    ref = rng.integers(0, num_states, size=n_seg)
+    A = n_seg * n_alt
+    start_t = np.zeros(A, np.int32)
+    end_t = np.zeros(A, np.int32)
+    label = np.zeros(A, np.int32)
+    lm = rng.normal(0.0, 0.3, size=A).astype(np.float32)
+    corr = np.zeros(A, np.float32)
+    P = n_alt
+    preds = -np.ones((A, P), np.int32)
+    succs = -np.ones((A, P), np.int32)
+    is_start = np.zeros(A, bool)
+    is_final = np.zeros(A, bool)
+    for s in range(n_seg):
+        for j in range(n_alt):
+            a = s * n_alt + j
+            start_t[a] = s * seg_len
+            end_t[a] = (s + 1) * seg_len
+            if j == 0:
+                label[a] = ref[s]
+            else:
+                alt = rng.integers(0, num_states)
+                label[a] = alt
+            corr[a] = 1.0 if label[a] == ref[s] else 0.0
+            if s == 0:
+                is_start[a] = True
+            else:
+                preds[a] = np.arange((s - 1) * n_alt, s * n_alt)
+            if s == n_seg - 1:
+                is_final[a] = True
+            else:
+                succs[a] = np.arange((s + 1) * n_alt, (s + 2) * n_alt)
+    ref_states = np.repeat(ref, seg_len).astype(np.int32)
+    if len(ref_states) < num_frames:
+        ref_states = np.pad(ref_states, (0, num_frames - len(ref_states)),
+                            mode="edge")
+    out = dict(start_t=start_t, end_t=end_t, label=label, lm=lm, corr=corr,
+               preds=preds, succs=succs, is_start=is_start, is_final=is_final,
+               arc_mask=np.ones(A, bool), ref_states=ref_states,
+               num_ref_units=np.float32(n_seg))
+    if max_arcs is not None and max_arcs > A:
+        pad = max_arcs - A
+        for k in ("start_t", "end_t", "label"):
+            out[k] = np.pad(out[k], (0, pad))
+        for k in ("lm", "corr"):
+            out[k] = np.pad(out[k], (0, pad))
+        for k in ("is_start", "is_final", "arc_mask"):
+            out[k] = np.pad(out[k], (0, pad))
+        out["preds"] = np.pad(out["preds"], ((0, pad), (0, 0)), constant_values=-1)
+        out["succs"] = np.pad(out["succs"], ((0, pad), (0, 0)), constant_values=-1)
+    return out
+
+
+def batch_lattices(lats: list[dict]) -> Lattice:
+    stacked = {k: jnp.asarray(np.stack([l[k] for l in lats])) for k in lats[0]}
+    return Lattice(**stacked)
+
+
+def make_lattice_batch(seed: int, *, batch: int, num_frames: int,
+                       num_states: int, seg_len: int = 4,
+                       n_alt: int = 3) -> Lattice:
+    rng = np.random.default_rng(seed)
+    return batch_lattices([
+        make_sausage_lattice(rng, num_frames=num_frames,
+                             num_states=num_states, seg_len=seg_len,
+                             n_alt=n_alt)
+        for _ in range(batch)])

@@ -1,0 +1,502 @@
+"""Residual block zoo: every ``block_pattern`` kind from configs/base.py.
+
+Each kind implements three entry points used by the backbone in
+``transformer.py``:
+
+  init_block(cfg, key, kind)                     -> params
+  block_apply(cfg, kind, p, x, positions)        -> (x, aux)          # seq mode
+  init_block_cache(cfg, kind, batch, cache_len)  -> cache
+  block_decode(cfg, kind, p, x, cache, pos)      -> (x, cache)        # 1 token
+
+``aux`` carries the MoE load-balance loss (0.0 for non-MoE blocks).
+
+Sliding-window / local-attention caches are ring buffers (length = window);
+full-attention caches are (batch, cache_len, K, hd).  In long-context decode
+mode the backbone remaps "attn"->"swa" (the beyond-paper bounded-cache
+variant described in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import fsdp
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv.  x: (B,T,C), w: (K,C)."""
+    Kk = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(Kk):
+        shift = Kk - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    if b is not None:
+        out = out + b.astype(x.dtype)
+    return out
+
+
+def conv1d_step(x_t, buf, w, b=None):
+    """Single-step depthwise conv.  x_t: (B,C), buf: (B,K-1,C) past inputs."""
+    seq = jnp.concatenate([buf, x_t[:, None]], axis=1)        # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", seq, w.astype(x_t.dtype))
+    if b is not None:
+        out = out + b.astype(x_t.dtype)
+    new_buf = seq[:, 1:]
+    return out, new_buf
+
+
+# ---------------------------------------------------------------------------
+# Attention-family blocks (attn / swa / local / moe / swamoe)
+# ---------------------------------------------------------------------------
+
+def _attn_kind(kind):
+    return kind in ("attn", "swa", "local", "moe", "swamoe")
+
+
+def _uses_window(kind):
+    return kind in ("swa", "local", "swamoe")
+
+
+def _uses_moe(kind):
+    return kind in ("moe", "swamoe")
+
+
+def init_attention_block(cfg, key, kind):
+    ks = _split(key, 4)
+    p = {"ln1": L.init_norm(cfg, cfg.d_model),
+         "attn": L.init_attention(cfg, ks[0]),
+         "ln2": L.init_norm(cfg, cfg.d_model)}
+    if _uses_moe(kind):
+        p["moe"] = L.init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[1])
+    return p
+
+
+def attention_block_apply(cfg, kind, p, x, positions, *, window_override=None):
+    # Megatron-SP: norms run in the sequence-sharded region; the T gather
+    # happens on the (bf16, post-norm) activations only.
+    h = fsdp.unshard_seq(L.norm_apply(cfg, p["ln1"], x))
+    q, k, v = L.qkv_project(cfg, p["attn"], h, positions,
+                            apply_rope=not cfg.learned_positions)
+    window = window_override if window_override is not None else cfg.sliding_window
+    if _uses_window(kind) or window_override is not None:
+        ctx = L.windowed_attention(q, k, v, window)
+    else:
+        ctx = L.causal_attention(q, k, v)
+    x = x + fsdp.constrain_activations(L.out_project(cfg, p["attn"], ctx))
+    h = fsdp.unshard_seq(L.norm_apply(cfg, p["ln2"], x))
+    if _uses_moe(kind):
+        moe_fn = (L.moe_apply_dispatch if cfg.moe_impl == "dispatch"
+                  else L.moe_apply)
+        y, aux = moe_fn(cfg, p["moe"], h)
+    else:
+        y, aux = L.mlp_apply(cfg, p["mlp"], h), 0.0
+    return x + fsdp.constrain_activations(y), aux
+
+
+def init_attention_cache(cfg, kind, batch, cache_len, *, long_mode=False):
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if _uses_window(kind):
+        slots = min(cache_len, cfg.sliding_window)
+    elif long_mode:
+        slots = min(cache_len, cfg.long_context_window)
+    else:
+        slots = cache_len
+    z = jnp.zeros((batch, slots, K, hd), cfg.cdtype)
+    return {"k": z, "v": z}
+
+
+def attention_block_decode(cfg, kind, p, x, cache, pos, *, long_mode=False):
+    """x: (B,1,d); pos: scalar absolute position of the new token."""
+    h = L.norm_apply(cfg, p["ln1"], x)
+    q, k, v = L.qkv_project(cfg, p["attn"], h, jnp.full((1,), pos),
+                            apply_rope=not cfg.learned_positions)
+    slots = cache["k"].shape[1]
+    ring = _uses_window(kind) or long_mode
+    ix = jnp.where(jnp.asarray(ring), pos % slots, jnp.minimum(pos, slots - 1))
+    kc = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0].astype(cache["k"].dtype), ix, axis=1)
+    vc = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0].astype(cache["v"].dtype), ix, axis=1)
+    valid = jnp.minimum(pos + 1, slots)
+    ctx = L.decode_attention(q, kc, vc, valid)
+    x = x + L.out_project(cfg, p["attn"], ctx)
+    h = L.norm_apply(cfg, p["ln2"], x)
+    if _uses_moe(kind):
+        y, _ = L.moe_apply(cfg, p["moe"], h)
+    else:
+        y = L.mlp_apply(cfg, p["mlp"], h)
+    return x + y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin) block
+# ---------------------------------------------------------------------------
+
+def _rg_dim(cfg):
+    return cfg.rglru_dim or cfg.d_model
+
+
+def init_rglru_block(cfg, key):
+    d, rg = cfg.d_model, _rg_dim(cfg)
+    ks = _split(key, 6)
+    return {
+        "ln1": L.init_norm(cfg, d),
+        "w_x": L.dense_init(ks[0], d, rg, cfg.pdtype),
+        "w_y": L.dense_init(ks[1], d, rg, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, rg)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((rg,), cfg.pdtype),
+        "w_input_gate": L.dense_init(ks[3], rg, rg, cfg.pdtype),
+        "w_rec_gate": L.dense_init(ks[4], rg, rg, cfg.pdtype),
+        "log_lambda": jnp.full((rg,), math.log(math.expm1(0.9 * 8.0)), cfg.pdtype),
+        "w_out": L.dense_init(ks[5], rg, d, cfg.pdtype),
+        "ln2": L.init_norm(cfg, d),
+        "mlp": L.init_mlp(cfg, key),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_gates(p, u):
+    """u: (..., rg) post-conv input.  Returns (log_a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    rg = jax.nn.sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32))
+    ig = jax.nn.sigmoid(uf @ p["w_input_gate"].astype(jnp.float32))
+    log_a = -_RG_C * rg * jax.nn.softplus(p["log_lambda"].astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return log_a, beta * ig * uf
+
+
+def rglru_scan(p, u):
+    """Parallel RG-LRU over time via associative scan.  u: (B,T,rg)."""
+    log_a, x_in = _rglru_gates(p, u)
+    a = jnp.exp(log_a)
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_block_apply(cfg, p, x, positions):
+    h = fsdp.unshard_seq(L.norm_apply(cfg, p["ln1"], x))
+    u = h @ p["w_x"].astype(h.dtype)
+    y = h @ p["w_y"].astype(h.dtype)
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    r = rglru_scan(p, u)
+    out = (r * jax.nn.gelu(y)) @ p["w_out"].astype(h.dtype)
+    x = x + fsdp.constrain_activations(out)
+    h = fsdp.unshard_seq(L.norm_apply(cfg, p["ln2"], x))
+    return x + fsdp.constrain_activations(L.mlp_apply(cfg, p["mlp"], h)), 0.0
+
+
+def init_rglru_cache(cfg, batch):
+    rg = _rg_dim(cfg)
+    return {"state": jnp.zeros((batch, rg), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, rg), cfg.cdtype)}
+
+
+def rglru_block_decode(cfg, p, x, cache, pos):
+    h = L.norm_apply(cfg, p["ln1"], x)               # (B,1,d)
+    u = (h @ p["w_x"].astype(h.dtype))[:, 0]
+    y = (h @ p["w_y"].astype(h.dtype))[:, 0]
+    u, conv_buf = conv1d_step(u, cache["conv"], p["conv_w"], p["conv_b"])
+    log_a, x_in = _rglru_gates(p, u)
+    state = jnp.exp(log_a) * cache["state"] + x_in
+    out = ((state.astype(h.dtype) * jax.nn.gelu(y)) @ p["w_out"].astype(h.dtype))[:, None]
+    x = x + out
+    hh = L.norm_apply(cfg, p["ln2"], x)
+    x = x + L.mlp_apply(cfg, p["mlp"], hh)
+    return x, {"state": state, "conv": conv_buf}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block (matrix memory, linear-attention-like)
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    inner = int(cfg.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    inner -= inner % H
+    return inner, H, inner // H
+
+
+def init_mlstm_block(cfg, key):
+    d = cfg.d_model
+    inner, H, hd = _mlstm_dims(cfg)
+    ks = _split(key, 8)
+    return {
+        "ln": L.init_norm(cfg, d),
+        "w_up": L.dense_init(ks[0], d, inner, cfg.pdtype),
+        "w_gate": L.dense_init(ks[1], d, inner, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, inner)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((inner,), cfg.pdtype),
+        "w_q": L.dense_init(ks[3], inner, inner, cfg.pdtype),
+        "w_k": L.dense_init(ks[4], inner, inner, cfg.pdtype),
+        "w_v": L.dense_init(ks[5], inner, inner, cfg.pdtype),
+        "w_if": L.dense_init(ks[6], inner, 2 * H, cfg.pdtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), jnp.full((H,), 3.0)]).astype(cfg.pdtype),
+        "w_down": L.dense_init(ks[7], inner, d, cfg.pdtype),
+    }
+
+
+def _mlstm_qkvif(cfg, p, u):
+    """u: (B,T,inner) conv output -> q,k,v (B,T,H,hd), log_i/log_f (B,T,H)."""
+    inner, H, hd = _mlstm_dims(cfg)
+    B, T, _ = u.shape
+    dt = u.dtype
+    q = (u @ p["w_q"].astype(dt)).reshape(B, T, H, hd)
+    k = (u @ p["w_k"].astype(dt)).reshape(B, T, H, hd) / math.sqrt(hd)
+    v = (u @ p["w_v"].astype(dt)).reshape(B, T, H, hd)
+    gif = (u @ p["w_if"].astype(dt) + p["b_if"].astype(dt)).astype(jnp.float32)
+    log_i, f_pre = gif[..., :H], gif[..., H:]
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_step(carry, inp):
+    """Stabilised mLSTM recurrence.  State per head: C (hd,hd), n (hd), m ()."""
+    C, n, m = carry
+    q, k, v, log_i, log_f = inp
+    m_new = jnp.maximum(log_f + m, log_i)
+    i = jnp.exp(log_i - m_new)[..., None]                     # (B,H,1)
+    f = jnp.exp(log_f + m - m_new)[..., None]
+    n_new = f * n + i * k
+    C_new = f[..., None] * C + i[..., None] * (v[..., :, None] * k[..., None, :])
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_new * q, -1)), 1.0)[..., None]
+    h = jnp.einsum("bhvk,bhk->bhv", C_new, q) / denom
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_block_apply(cfg, p, x, positions, *, time_chunk: int = 64):
+    """mLSTM over a sequence with a TIME-CHUNKED matrix-state recurrence.
+
+    A flat per-timestep scan saves the (B, H, hd, hd) matrix state at every
+    step for the backward pass — on xlstm-125m train_4k that was the single
+    worst memory/roofline point of the whole sweep (86 GiB/dev, memory term
+    1.7e4 s; EXPERIMENTS.md §Perf hillclimb 1).  Chunking time into blocks
+    of ``time_chunk`` with a rematted inner scan stores only the T/C chunk-
+    boundary states (+ one chunk of transient state in backward), cutting
+    state traffic and residual memory by ~C.
+    """
+    inner, H, hd = _mlstm_dims(cfg)
+    B, T, _ = x.shape
+    h0 = fsdp.unshard_seq(L.norm_apply(cfg, p["ln"], x))
+    u = h0 @ p["w_up"].astype(h0.dtype)
+    g = h0 @ p["w_gate"].astype(h0.dtype)
+    u = jax.nn.silu(causal_conv1d(u, p["conv_w"], p["conv_b"]))
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, u)
+    qT, kT, vT = (a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (q, k, v))
+    liT, lfT = log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2)
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    xs = (qT, kT, vT, liT, lfT)
+
+    tc = time_chunk
+    while T % tc:
+        tc -= 1
+    if tc > 1 and T // tc > 1:
+        nchunk = T // tc
+        xs = jax.tree.map(lambda a: a.reshape((nchunk, tc) + a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_body(carry, chunk):
+            carry, hs = jax.lax.scan(_mlstm_step, carry, chunk)
+            return carry, hs
+
+        _, hs = jax.lax.scan(chunk_body, (C0, n0, m0), xs)
+        hs = hs.reshape((T,) + hs.shape[2:])
+    else:
+        _, hs = jax.lax.scan(_mlstm_step, (C0, n0, m0), xs)
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, T, inner).astype(x.dtype)
+    out = (hs * jax.nn.silu(g)) @ p["w_down"].astype(x.dtype)
+    return x + fsdp.constrain_activations(out), 0.0
+
+
+def init_mlstm_cache(cfg, batch):
+    inner, H, hd = _mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, inner), cfg.cdtype)}
+
+
+def mlstm_block_decode(cfg, p, x, cache, pos):
+    inner, H, hd = _mlstm_dims(cfg)
+    B = x.shape[0]
+    h0 = L.norm_apply(cfg, p["ln"], x)
+    u = (h0 @ p["w_up"].astype(h0.dtype))[:, 0]
+    g = (h0 @ p["w_gate"].astype(h0.dtype))[:, 0]
+    u, conv_buf = conv1d_step(u, cache["conv"], p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u)
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, u[:, None])
+    carry = (cache["C"], cache["n"], cache["m"])
+    (C, n, m), h = _mlstm_step(carry, (q[:, 0].astype(jnp.float32),
+                                       k[:, 0].astype(jnp.float32),
+                                       v[:, 0].astype(jnp.float32),
+                                       log_i[:, 0], log_f[:, 0]))
+    h = h.reshape(B, inner).astype(x.dtype)
+    out = ((h * jax.nn.silu(g)) @ p["w_down"].astype(x.dtype))[:, None]
+    return x + out, {"C": C, "n": n, "m": m, "conv": conv_buf}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (scalar memory, per-head recurrent)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(cfg, key):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = _split(key, 4)
+    r = (jax.random.normal(ks[1], (4, H, hd, hd)) / math.sqrt(hd)).astype(cfg.pdtype)
+    return {
+        "ln": L.init_norm(cfg, d),
+        "w_zifo": L.dense_init(ks[0], d, 4 * d, cfg.pdtype),
+        "b_zifo": jnp.zeros((4 * d,), cfg.pdtype),
+        "r_zifo": r,                                   # per-head recurrent mats
+        "w_up": L.dense_init(ks[2], d, int(cfg.proj_factor * d), cfg.pdtype),
+        "w_down": L.dense_init(ks[3], int(cfg.proj_factor * d), d, cfg.pdtype),
+    }
+
+
+def _slstm_step(p, carry, wx_t):
+    """carry: (c, n, h, m) each (B,H,hd); wx_t: (B,4,H,hd) input pre-acts."""
+    c, n, h, m = carry
+    rec = jnp.einsum("ghvk,bhk->bghv", p["r_zifo"].astype(jnp.float32), h)
+    pre = wx_t + rec                                  # (B,4,H,hd)
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = -jax.nn.softplus(-pre[:, 2])              # log sigmoid(f)
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i = jnp.exp(log_i - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block_apply(cfg, p, x, positions, *, time_chunk: int = 64):
+    B, T, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    h0 = fsdp.unshard_seq(L.norm_apply(cfg, p["ln"], x))
+    wx = (h0 @ p["w_zifo"].astype(h0.dtype) + p["b_zifo"].astype(h0.dtype))
+    wx = wx.reshape(B, T, 4, H, hd).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    zero = jnp.zeros((B, H, hd), jnp.float32)
+    carry0 = (zero, zero, zero, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    def body(carry, wx_t):
+        new = _slstm_step(p, carry, wx_t)
+        return new, new[2]
+
+    tc = time_chunk
+    while T % tc:
+        tc -= 1
+    if tc > 1 and T // tc > 1:
+        # time-chunked remat scan (see mlstm_block_apply docstring)
+        wx = wx.reshape((T // tc, tc) + wx.shape[1:])
+
+        @jax.checkpoint
+        def chunk_body(carry, chunk):
+            return jax.lax.scan(body, carry, chunk)
+
+        _, hs = jax.lax.scan(chunk_body, carry0, wx)
+        hs = hs.reshape((T,) + hs.shape[2:])
+    else:
+        _, hs = jax.lax.scan(body, carry0, wx)
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    up = jax.nn.gelu(hs @ p["w_up"].astype(x.dtype))
+    return x + fsdp.constrain_activations(up @ p["w_down"].astype(x.dtype)), 0.0
+
+
+def init_slstm_cache(cfg, batch):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def slstm_block_decode(cfg, p, x, cache, pos):
+    B, _, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    h0 = L.norm_apply(cfg, p["ln"], x)
+    wx = (h0 @ p["w_zifo"].astype(h0.dtype) + p["b_zifo"].astype(h0.dtype))
+    wx = wx.reshape(B, 4, H, hd).astype(jnp.float32)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(p, carry, wx)
+    hs = h.reshape(B, 1, d).astype(x.dtype)
+    up = jax.nn.gelu(hs @ p["w_up"].astype(x.dtype))
+    return x + up @ p["w_down"].astype(x.dtype), {"c": c, "n": n, "h": h, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch tables
+# ---------------------------------------------------------------------------
+
+def init_block(cfg, key, kind):
+    if _attn_kind(kind):
+        return init_attention_block(cfg, key, kind)
+    if kind == "rglru":
+        return init_rglru_block(cfg, key)
+    if kind == "mlstm":
+        return init_mlstm_block(cfg, key)
+    if kind == "slstm":
+        return init_slstm_block(cfg, key)
+    raise ValueError(kind)
+
+
+def block_apply(cfg, kind, p, x, positions):
+    if _attn_kind(kind):
+        return attention_block_apply(cfg, kind, p, x, positions)
+    if kind == "rglru":
+        return rglru_block_apply(cfg, p, x, positions)
+    if kind == "mlstm":
+        return mlstm_block_apply(cfg, p, x, positions)
+    if kind == "slstm":
+        return slstm_block_apply(cfg, p, x, positions)
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg, kind, batch, cache_len, *, long_mode=False):
+    if _attn_kind(kind):
+        return init_attention_cache(cfg, kind, batch, cache_len, long_mode=long_mode)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch)
+    if kind == "mlstm":
+        return init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_decode(cfg, kind, p, x, cache, pos, *, long_mode=False):
+    if _attn_kind(kind):
+        return attention_block_decode(cfg, kind, p, x, cache, pos, long_mode=long_mode)
+    if kind == "rglru":
+        return rglru_block_decode(cfg, p, x, cache, pos)
+    if kind == "mlstm":
+        return mlstm_block_decode(cfg, p, x, cache, pos)
+    if kind == "slstm":
+        return slstm_block_decode(cfg, p, x, cache, pos)
+    raise ValueError(kind)

@@ -1,0 +1,492 @@
+"""Core neural-net layers shared by the model zoo.
+
+Pure-functional style: ``init_*`` builds a params pytree (nested dicts with
+stable leaf names that the sharding rules in ``repro/launch/sharding.py``
+pattern-match), ``*_apply`` consumes it.  Everything is differentiable and
+JVP-able (the NGHF curvature products push ``jax.jvp``/``jax.vjp`` through
+these functions — Pearlmutter's R-operator).
+
+Attention comes in three flavours:
+  * ``causal_attention``   — chunked online-softmax (flash-style) full causal
+                             attention; avoids materialising TxS scores.
+  * ``windowed_attention`` — sliding-window attention; per q-chunk a fixed
+                             (window + chunk) KV slice is gathered with
+                             ``dynamic_slice`` so HLO FLOPs scale with the
+                             window, not the sequence.
+  * ``decode_attention``   — single-query attention against a KV cache.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def norm_apply(cfg, p, x):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        x = x - x.mean(-1, keepdims=True)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + 1e-6)
+    x = x * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        x = x + p["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+def _rms(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True) + eps).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """Apply rotary embeddings.  x: (..., T, H, hd), positions: (..., T)."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., T, half)
+    ang = ang[..., None, :]                                          # broadcast over heads
+    cos, sin = jnp.cos(ang).astype(x.dtype), jnp.sin(ang).astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention projections
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, cfg.pdtype),
+        "wk": dense_init(ks[1], d, K * hd, cfg.pdtype),
+        "wv": dense_init(ks[2], d, K * hd, cfg.pdtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((K * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((K * hd,), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def qkv_project(cfg, p, x, positions, *, apply_rope=True):
+    """x: (B, T, d) -> q (B,T,H,hd), k/v (B,T,K,hd)."""
+    B, T, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, K, hd)
+    v = v.reshape(B, T, K, hd)
+    if "q_norm" in p:
+        q = _rms(q) * p["q_norm"].astype(dt)
+        k = _rms(k) * p["k_norm"].astype(dt)
+    if apply_rope:
+        q = rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    return q, k, v
+
+
+def out_project(cfg, p, ctx):
+    B, T, H, hd = ctx.shape
+    return ctx.reshape(B, T, H * hd) @ p["wo"].astype(ctx.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _gqa_scores(qb, kb):
+    """qb: (B,qc,K,G,hd), kb: (B,kc,K,hd) -> (B,K,G,qc,kc) scaled scores."""
+    hd = qb.shape[-1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb, preferred_element_type=jnp.float32)
+    return s * (1.0 / math.sqrt(hd))
+
+
+def _gqa_out(probs, vb):
+    """probs: (B,K,G,qc,kc), vb: (B,kc,K,hd) -> (B,qc,K,G,hd)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, vb.astype(probs.dtype))
+
+
+def repeat_kv(k, H: int):
+    """GQA -> MHA: repeat kv heads to H so that head sharding propagates
+    from q (kv_heads rarely divides the mesh "model" extent; replicated kv
+    heads left in GQA layout made GSPMD replicate the whole attention
+    computation across "model" — §Perf iter 4)."""
+    K = k.shape[2]
+    if K == H:
+        return k
+    return jnp.repeat(k, H // K, axis=2)
+
+
+def causal_attention(q, k, v, *, q_chunk=512, kv_chunk=1024, q_offset=0):
+    """Chunked online-softmax causal attention.
+
+    q: (B,T,H,hd), k/v: (B,S,K,hd) with H = K*G (kv repeated internally).
+    ``q_offset`` is the absolute position of q[0] relative to k[0] (for
+    prefix decoding).  Returns (B,T,H,hd).  Scores are never materialised
+    beyond (qc x kc) tiles, forward OR backward.
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    k = repeat_kv(k, H)
+    v = repeat_kv(v, H)
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, S)
+    nq, nk = T // qc, S // kc
+    qr = q.reshape(B, nq, qc, H, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    # flash-style: the backward RECOMPUTES the score/prob tiles instead of
+    # saving (nq x B x H x qc x kc) f32 probabilities (measured 8 GiB/dev
+    # on qwen2.5-3b train_4k without this; §Perf iter 3).  The inner
+    # kv-scan body is checkpointed too, else ITS backward saves nk tiles.
+    @jax.checkpoint
+    def per_q_chunk(args):
+        qi, qb = args                                   # qb: (B,qc,H,hd)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        @jax.checkpoint
+        def body(carry, kj):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, kj * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kj * kc, kc, axis=1)
+            kpos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, qc, hd), jnp.float32)
+        m0 = jnp.full((B, H, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3)                 # (B,qc,H,hd)
+
+    outs = jax.lax.map(per_q_chunk, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    return out.astype(q.dtype)
+
+
+def windowed_attention(q, k, v, window: int, *, q_chunk=512, q_offset=0):
+    """Sliding-window causal attention: token t attends (t-window, t].
+
+    Per q-chunk, a fixed-length KV slice of (window + qc) is gathered with
+    ``dynamic_slice`` so compute scales with the window.  k/v are front-padded
+    by ``window`` zeros internally.
+    """
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    k = repeat_kv(k, H)
+    v = repeat_kv(v, H)
+    qc = min(q_chunk, T)
+    nq = T // qc
+    span = window + qc
+    scale = 1.0 / math.sqrt(hd)
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qr = q.reshape(B, nq, qc, H, hd)
+
+    @jax.checkpoint
+    def per_q_chunk(args):
+        qi, qb = args
+        start = qi * qc + q_offset            # in padded coords: kpos0 = start - window + window
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+        kpos = start - window + jnp.arange(span)          # absolute (can be <0 in pad)
+        s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] > qpos[:, None] - window - 1) & (kpos[None, :] >= 0)
+        s = jnp.where(mask[None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", p, vb.astype(jnp.float32))
+        return out
+
+    outs = jax.lax.map(per_q_chunk, (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+    return out.astype(q.dtype)
+
+
+def cross_attention(q, k, v):
+    """Full (non-causal) attention, q: (B,T,H,hd) over memory k/v (B,S,K,hd)."""
+    s = _gqa_scores(
+        q.reshape(q.shape[0], q.shape[1], k.shape[2], -1, q.shape[3]), k)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _gqa_out(p, v)
+    B, T = q.shape[:2]
+    return out.reshape(B, T, -1, q.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len):
+    """Single-token attention against a cache.
+
+    q: (B,1,H,hd); k/v_cache: (B,S,K,hd); valid_len: () or (B,) number of
+    valid cache positions (including the newly-written token).
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qb = q.reshape(B, 1, K, G, hd)
+    s = _gqa_scores(qb, k_cache)                         # (B,K,G,1,S)
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.broadcast_to(jnp.asarray(valid_len), (B,))[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _gqa_out(p, v_cache)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def _act(name, x):
+    if name in ("swiglu",):
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(name)
+
+
+def is_gated(activation: str) -> bool:
+    return activation in ("swiglu", "geglu")
+
+
+def init_mlp(cfg, key, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, ff, cfg.pdtype),
+         "w_out": dense_init(ks[1], ff, d, cfg.pdtype)}
+    if is_gated(cfg.activation):
+        p["w_gate"] = dense_init(ks[2], d, ff, cfg.pdtype)
+    return p
+
+
+def mlp_apply(cfg, p, x):
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if "w_gate" in p:
+        h = _act(cfg.activation, x @ p["w_gate"].astype(dt)) * h
+    else:
+        h = _act(cfg.activation, h)
+    return h @ p["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts (dense one-hot dispatch; expert- or ff-sharded)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg, key):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+
+    def ed(k, a, b):
+        return (jax.random.normal(k, (E, a, b), jnp.float32) * scale).astype(cfg.pdtype)
+
+    p = {"router": dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+         "w_in": ed(ks[1], d, ff),
+         "w_out": (jax.random.normal(ks[2], (E, ff, d), jnp.float32) / math.sqrt(ff)).astype(cfg.pdtype)}
+    if is_gated(cfg.activation):
+        p["w_gate"] = ed(ks[3], d, ff)
+    return p
+
+
+def moe_apply_dispatch(cfg, p, x, *, capacity_factor: float = 1.25):
+    """Capacity-based token dispatch MoE (Switch-style).
+
+    The dense one-hot formulation below computes ALL E experts for every
+    token — for mixtral (E=8, top-2) that is 4x wasted FLOPs and the #1
+    compute term of the whole dry-run sweep (§Perf hillclimb 3).  Here
+    each expert processes at most C = ceil(S·k/E · capacity_factor)
+    tokens: tokens are sorted by assigned expert (static shapes, so the
+    whole thing jvp/vjp-s through for the NGHF curvature products),
+    gathered into (E, C, d) buckets, transformed with per-expert matmuls,
+    and combined back with router weights.  Overflowing tokens are dropped
+    (standard Switch behaviour; the load-balance aux keeps overflow rare).
+    """
+    dt = x.dtype
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    S = B * T
+    xf = x.reshape(S, d)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_ix = jax.lax.top_k(probs, k)                   # (S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(S * k / E * capacity_factor))
+    flat_e = top_ix.reshape(-1)                               # (S*k,)
+    flat_tok = jnp.repeat(jnp.arange(S), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)                  # group by expert
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+    # position within the expert bucket
+    pos = jnp.arange(S * k) - jnp.searchsorted(e_sorted, e_sorted, side="left")
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, E * C)         # E*C = drop bin
+    # scatter token ids / weights into (E*C,) buckets
+    bucket_tok = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        tok_sorted.astype(jnp.int32))[:E * C]
+    bucket_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, w_sorted, 0.0))[:E * C]
+    bucket_valid = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        keep.astype(jnp.float32))[:E * C]
+
+    xe = xf[bucket_tok].reshape(E, C, d) * \
+        bucket_valid.reshape(E, C, 1).astype(dt)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(dt))
+    if "w_gate" in p:
+        gpre = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+        h = _act(cfg.activation, gpre) * h
+    else:
+        h = _act(cfg.activation, h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
+    ye = ye.reshape(E * C, d) * bucket_w.reshape(-1, 1).astype(dt)
+    out = jnp.zeros((S, d), dt).at[bucket_tok].add(ye)
+    out = out.reshape(B, T, d)
+
+    f = jnp.zeros((E,), jnp.float32).at[top_ix.reshape(-1)].add(1.0) / (S * k)
+    aux = E * jnp.sum(f * probs.mean(0))
+    return out, aux
+
+
+def moe_apply(cfg, p, x, *, t_chunk: int = 2048):
+    """Top-k MoE FFN with dense one-hot combine.
+
+    Returns (out, aux) where aux is the switch-style load-balance loss.
+    The dense formulation (weights (T,E) mostly zero) lets GSPMD shard the
+    expert dimension without explicit all-to-alls (the gather-dispatch
+    variant below is better on one device but catastrophic under GSPMD —
+    EXPERIMENTS.md §Perf H3a).  Long sequences are processed in rematted
+    T-chunks so the (B, tc, E, ff) transients stay bounded (granite's 40
+    experts at prefill_32k: 30 GiB -> bounded; §Perf hillclimb 3).
+    """
+    dt = x.dtype
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_ix = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # dense combine weights (B,T,E)
+    comb = jnp.zeros_like(probs)
+    comb = jax.vmap(jax.vmap(lambda c, ix, w: c.at[ix].add(w)))(comb, top_ix, top_w)
+
+    @jax.checkpoint
+    def expert_ffn(xc, cc):
+        h = jnp.einsum("btd,edf->btef", xc, p["w_in"].astype(dt))
+        if "w_gate" in p:
+            g = jnp.einsum("btd,edf->btef", xc, p["w_gate"].astype(dt))
+            h = _act(cfg.activation, g) * h
+        else:
+            h = _act(cfg.activation, h)
+        y = jnp.einsum("btef,efd->bted", h, p["w_out"].astype(dt))
+        return jnp.einsum("bted,bte->btd", y, cc.astype(dt))
+
+    tc = min(t_chunk, T)
+    while T % tc:
+        tc -= 1
+    if tc < T:
+        xs = x.reshape(B, T // tc, tc, d).transpose(1, 0, 2, 3)
+        cs = comb.reshape(B, T // tc, tc, E).transpose(1, 0, 2, 3)
+        out = jax.lax.map(lambda ab: expert_ffn(*ab), (xs, cs))
+        out = out.transpose(1, 0, 2, 3).reshape(B, T, d)
+    else:
+        out = expert_ffn(x, comb)
+
+    # switch-transformer aux loss: E * sum_e f_e * P_e
+    f = (comb > 0).astype(jnp.float32).mean((0, 1))          # fraction routed
+    pmean = probs.mean((0, 1))
+    aux = E * jnp.sum(f * pmean)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg, key):
+    p = {"table": embed_init(key, cfg.vocab_size, cfg.d_model, cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(
+            jax.random.fold_in(key, 1), cfg.d_model, cfg.vocab_size, cfg.pdtype)
+    return p
+
+
+def embed_apply(cfg, p, tokens):
+    return p["table"].astype(cfg.cdtype)[tokens]
+
+
+def lm_head_apply(cfg, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["table"].astype(x.dtype).T
+    return x @ p["lm_head"].astype(x.dtype)

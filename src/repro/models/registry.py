@@ -1,0 +1,111 @@
+"""Model registry: binds an ArchConfig to a uniform Model API.
+
+Model(cfg) exposes:
+    init(key)                                   -> params
+    forward(params, batch)                      -> (logits, aux)
+    init_cache(batch, cache_len, long_mode)     -> cache
+    decode_step(params, cache, tokens, pos, long_mode) -> (logits, cache)
+    input_specs(shape_name)                     -> dict of ShapeDtypeStruct
+    share_counts(params)                        -> pytree of per-leaf counts
+    param_count(params_shapes)                  -> int
+
+``input_specs`` follows the dry-run contract: weak-type-correct,
+shardable stand-ins, never allocating device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.models import encdec, transformer
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self._mod = encdec if cfg.is_encoder_decoder else transformer
+
+    # --- parameters --------------------------------------------------------
+    def init(self, key):
+        return self._mod.init_params(self.cfg, key)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_count(self) -> int:
+        import math
+        return sum(math.prod(l.shape)              # python ints: no overflow
+                   for l in jax.tree.leaves(self.param_shapes()))
+
+    # --- compute -----------------------------------------------------------
+    def forward(self, params, batch):
+        return self._mod.forward(self.cfg, params, batch)
+
+    def forward_hidden(self, params, batch):
+        """(hidden (B,T,d), aux) — pre-LM-head, for chunked-vocab losses."""
+        return self._mod.forward_hidden(self.cfg, params, batch)
+
+    def head_matrix(self, params):
+        return self._mod.head_matrix(self.cfg, params)
+
+    def init_cache(self, batch: int, cache_len: int, *, long_mode=False):
+        return self._mod.init_cache(self.cfg, batch, cache_len, long_mode=long_mode)
+
+    def decode_step(self, params, cache, tokens, pos, *, long_mode=False):
+        return self._mod.decode_step(self.cfg, params, cache, tokens, pos,
+                                     long_mode=long_mode)
+
+    # --- dry-run input stand-ins -------------------------------------------
+    def input_specs(self, shape_name: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        shp = INPUT_SHAPES[shape_name]
+        B, T = shp.global_batch, shp.seq_len
+        tok = jax.ShapeDtypeStruct
+        if shp.mode in ("train", "prefill"):
+            specs = {"tokens": tok((B, T), jnp.int32)}
+            if shp.mode == "train":
+                specs["labels"] = tok((B, T), jnp.int32)
+            if cfg.is_encoder_decoder:
+                # stubbed conv/mel frontend: precomputed frame embeddings
+                specs["encoder_input"] = tok(
+                    (B, cfg.encoder_frames, cfg.d_model), cfg.cdtype)
+            return specs
+        # decode: ONE new token against a cache of seq_len
+        long_mode = shp.name == "long_500k"
+        cache = jax.eval_shape(
+            lambda: self.init_cache(B, T, long_mode=long_mode))
+        cache = jax.tree.map(lambda s: tok(s.shape, s.dtype), cache)
+        return {"tokens": tok((B, 1), jnp.int32),
+                "pos": tok((), jnp.int32),
+                "cache": cache}
+
+    # --- shared-parameter counts (Sec. 4.3) --------------------------------
+    def share_counts(self, params):
+        """Relative per-sample application counts for the CG preconditioner.
+
+        Transformer LMs apply every weight once per token => uniform counts
+        (the preconditioner reduces to identity).  Two exceptions:
+          * MoE expert weights: expected usage top_k/E per token.
+          * enc-dec: encoder weights are applied encoder_frames times per
+            sample vs T_dec for decoder weights; we fold the static ratio in.
+        """
+        cfg = self.cfg
+
+        def leaf_count(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if cfg.num_experts and any(k in ("w_in", "w_out", "w_gate") for k in keys) \
+                    and any(k == "moe" for k in keys):
+                return jnp.asarray(cfg.num_experts_per_tok / cfg.num_experts,
+                                   jnp.float32)
+            if cfg.is_encoder_decoder and any(k == "encoder" for k in keys):
+                return jnp.asarray(cfg.encoder_frames / 1024.0, jnp.float32)
+            return jnp.asarray(1.0, jnp.float32)
+
+        return jax.tree_util.tree_map_with_path(leaf_count, params)
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

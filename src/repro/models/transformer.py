@@ -1,0 +1,204 @@
+"""Decoder-only backbone covering dense / moe / ssm / hybrid / vlm families.
+
+Depth is organised as ``block_pattern`` cycled over ``num_layers``:
+``num_layers // len(pattern)`` *periods* are executed under ``lax.scan``
+(per-slot parameters stacked over periods, so HLO size is constant in
+depth), plus an unrolled remainder.  ``remat="full"`` wraps each period in
+``jax.checkpoint`` so activation memory is O(sqrt-ish) rather than O(depth).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import fsdp
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+def layer_plan(cfg):
+    pattern = cfg.block_pattern
+    per = len(pattern)
+    n_periods = cfg.num_layers // per
+    rest = tuple(pattern[i] for i in range(cfg.num_layers - n_periods * per))
+    return pattern, n_periods, rest
+
+
+def _sqrt_factor(n: int):
+    """Largest divisor pair (a, b), a <= sqrt(n) <= b, a*b = n."""
+    a = int(math.isqrt(n))
+    while n % a:
+        a -= 1
+    return a, n // a
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> Dict:
+    pattern, n_periods, rest = layer_plan(cfg)
+    k_emb, k_body, k_rest, k_norm = jax.random.split(key, 4)
+    params = {"embed": L.init_embedding(cfg, k_emb),
+              "final_norm": L.init_norm(cfg, cfg.d_model)}
+    periods = {}
+    for s, kind in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(k_body, s), max(n_periods, 1))
+        if n_periods:
+            periods[f"slot{s}"] = jax.vmap(
+                lambda k, kind=kind: B.init_block(cfg, k, kind))(keys)
+    params["periods"] = periods
+    params["rest"] = {
+        f"rest{i}": B.init_block(cfg, jax.random.fold_in(k_rest, i), kind)
+        for i, kind in enumerate(rest)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def head_matrix(cfg, params):
+    """(d, V) LM head (transposed embedding when tied), FSDP-gathered."""
+    emb = fsdp.gather_for_compute(params["embed"], cfg.cdtype)
+    if cfg.tie_embeddings:
+        return emb["table"].T
+    return emb["lm_head"]
+
+
+def forward_hidden(cfg, params, batch):
+    """As ``forward`` but stops before the LM head: (hidden (B,T,d), aux).
+    Used with losses/chunked_lm.py so (B,T,V) logits never materialise."""
+    return _body(cfg, params, batch)
+
+
+def forward(cfg, params, batch):
+    """batch["tokens"]: (B, T) int32.  Returns (logits (B,T,V) f32, aux)."""
+    x, aux = _body(cfg, params, batch)
+    logits = L.lm_head_apply(
+        cfg, fsdp.gather_for_compute(params["embed"], cfg.cdtype), x)
+    return logits.astype(jnp.float32), aux
+
+
+def _body(cfg, params, batch):
+    tokens = batch["tokens"]
+    T = tokens.shape[1]
+    pattern, n_periods, rest = layer_plan(cfg)
+    x = L.embed_apply(cfg, fsdp.gather_for_compute(params["embed"], cfg.cdtype),
+                      tokens)
+    x = fsdp.constrain_activations(x)
+    positions = jnp.arange(T)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        # pin the loop-carry boundary value to the sequence-sharded layout
+        # (GSPMD's while-carry fixpoint otherwise hoists the gather out of
+        # the body and saves full-T residual stacks; §Perf iter 4) ...
+        x = fsdp.constrain_activations(x)
+        # FSDP: gather 2d-stored weights to their 1d compute sharding here,
+        # inside the (rematted) scan body — backward re-gathers instead of
+        # holding gathered copies (see launch/fsdp.py).
+        period_params = fsdp.gather_for_compute(period_params, cfg.cdtype)
+        for s, kind in enumerate(pattern):
+            x, a = B.block_apply(cfg, kind, period_params[f"slot{s}"], x, positions)
+            aux = aux + a
+        # ... and T re-sharded over "model" at the period boundary so the
+        # remat-saved residual stack is sequence-sharded.
+        x = fsdp.constrain_activations(x)
+        return (x, aux), None
+
+    if n_periods:
+        body = period_body
+        if cfg.remat == "full":
+            body = jax.checkpoint(period_body, prevent_cse=False)
+        if cfg.scan_layers and n_periods > 1:
+            a, b = _sqrt_factor(n_periods)
+            if cfg.remat == "full" and a > 1:
+                # two-level (sqrt) remat scan: saved residual stacks shrink
+                # from n_periods to (a outer + b inner-transient) carries —
+                # 80-layer qwen2-72b: 16 GiB -> ~3.6 GiB/dev (§Perf iter 4).
+                nested = jax.tree.map(
+                    lambda t: t.reshape((a, b) + t.shape[1:]),
+                    params["periods"])
+
+                @jax.checkpoint
+                def outer_body(carry, chunk_params):
+                    c2, _ = jax.lax.scan(body, carry, chunk_params)
+                    return c2, None
+
+                (x, aux), _ = jax.lax.scan(outer_body, (x, 0.0), nested)
+            else:
+                (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["periods"])
+        else:
+            carry = (x, 0.0)
+            for i in range(n_periods):
+                carry, _ = body(carry, jax.tree.map(lambda a: a[i], params["periods"]))
+            x, aux = carry
+    else:
+        aux = 0.0
+    for i, kind in enumerate(rest):
+        rp = fsdp.gather_for_compute(params["rest"][f"rest{i}"], cfg.cdtype)
+        x, a = B.block_apply(cfg, kind, rp, x, positions)
+        aux = aux + a
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, cache_len: int, *, long_mode=False):
+    pattern, n_periods, rest = layer_plan(cfg)
+    cache = {"periods": {}, "rest": {}}
+    for s, kind in enumerate(pattern):
+        if n_periods:
+            one = B.init_block_cache(cfg, kind, batch_size, cache_len, long_mode=long_mode)
+            cache["periods"][f"slot{s}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), one)
+    for i, kind in enumerate(rest):
+        cache["rest"][f"rest{i}"] = B.init_block_cache(
+            cfg, kind, batch_size, cache_len, long_mode=long_mode)
+    return cache
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, long_mode=False):
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 absolute
+    position being written.  Returns (logits (B,1,V) f32, new cache)."""
+    pattern, n_periods, rest = layer_plan(cfg)
+    emb = fsdp.gather_for_compute(params["embed"], cfg.cdtype)
+    x = L.embed_apply(cfg, emb, tokens)
+
+    def period_body(x, slices):
+        period_params, period_cache = slices
+        period_params = fsdp.gather_for_compute(period_params, cfg.cdtype)
+        new_cache = {}
+        for s, kind in enumerate(pattern):
+            x, c = B.block_decode(cfg, kind, period_params[f"slot{s}"], x,
+                                  period_cache[f"slot{s}"], pos, long_mode=long_mode)
+            new_cache[f"slot{s}"] = c
+        return x, new_cache
+
+    new_cache = {"periods": {}, "rest": {}}
+    if n_periods:
+        if cfg.scan_layers and n_periods > 1:
+            x, new_cache["periods"] = jax.lax.scan(
+                period_body, x, (params["periods"], cache["periods"]))
+        else:
+            outs = []
+            for i in range(n_periods):
+                x, c = period_body(x, (jax.tree.map(lambda a: a[i], params["periods"]),
+                                       jax.tree.map(lambda a: a[i], cache["periods"])))
+                outs.append(c)
+            new_cache["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    for i, kind in enumerate(rest):
+        rp = fsdp.gather_for_compute(params["rest"][f"rest{i}"], cfg.cdtype)
+        x, c = B.block_decode(cfg, kind, rp, x,
+                              cache["rest"][f"rest{i}"], pos, long_mode=long_mode)
+        new_cache["rest"][f"rest{i}"] = c
+    x = L.norm_apply(cfg, params["final_norm"], x)
+    logits = L.lm_head_apply(cfg, emb, x)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — the
+smoke tests and benches must see the real single CPU device (the dry-run
+is the only consumer of the 512-device trick and sets it itself).
+"""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

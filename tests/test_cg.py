@@ -1,0 +1,126 @@
+"""CG engine unit + property tests (paper Alg. 1, Secs. 4.2/4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tree_math as tm
+from repro.core.cg import cg_solve
+
+
+def _spd(rng, n, cond=10.0):
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eig = np.linspace(1.0, cond, n)
+    return (q * eig) @ q.T
+
+
+def test_cg_matches_dense_solve(rng):
+    n = 24
+    A = _spd(rng, n)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg_solve(lambda v: {"x": jnp.asarray(A, jnp.float32) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=n + 5)
+    np.testing.assert_allclose(np.asarray(res.x["x"]),
+                               np.linalg.solve(A, b), rtol=1e-3, atol=1e-4)
+
+
+def test_preconditioned_cg_same_solution(rng):
+    n = 16
+    A = _spd(rng, n)
+    b = rng.standard_normal(n).astype(np.float32)
+    counts = {"x": jnp.asarray(rng.uniform(1, 8, n), jnp.float32)}
+    res = cg_solve(lambda v: {"x": jnp.asarray(A, jnp.float32) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=n + 5, precond=counts)
+    np.testing.assert_allclose(np.asarray(res.x["x"]),
+                               np.linalg.solve(A, b), rtol=1e-3, atol=1e-4)
+
+
+def test_preconditioner_speeds_ill_conditioned_diag(rng):
+    """Diagonal preconditioning with the true diagonal solves a diagonal
+    system in one effective step — the Sec. 4.3 mechanism."""
+    n = 32
+    d = np.geomspace(1, 1e4, n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    bv = lambda v: {"x": jnp.asarray(d) * v["x"]}           # noqa: E731
+    plain = cg_solve(bv, {"x": jnp.asarray(b)}, iters=4)
+    pre = cg_solve(bv, {"x": jnp.asarray(b)}, iters=4,
+                   precond={"x": jnp.asarray(d)})
+    x_true = b / d
+    err_plain = float(jnp.linalg.norm(plain.x["x"] - x_true))
+    err_pre = float(jnp.linalg.norm(pre.x["x"] - x_true))
+    assert err_pre < err_plain * 0.1
+
+
+def test_negative_curvature_freezes(rng):
+    n = 8
+    A = -np.eye(n, dtype=np.float32)                         # negative definite
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg_solve(lambda v: {"x": jnp.asarray(A) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=5)
+    # all curvature values non-positive => x stays 0
+    assert np.all(np.asarray(res.curv) <= 0)
+    np.testing.assert_allclose(np.asarray(res.x["x"]), 0.0)
+
+
+def test_candidate_selection_picks_best():
+    # eval_fn rewards a specific iteration count
+    A = np.diag(np.linspace(1, 3, 6)).astype(np.float32)
+    b = np.ones(6, np.float32)
+
+    def eval_fn(x):
+        # loss minimised when ||x|| close to 0.3
+        return jnp.abs(tm.norm(x) - 0.3)
+
+    res = cg_solve(lambda v: {"x": jnp.asarray(A) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=6, eval_fn=eval_fn)
+    losses = np.asarray(res.losses)
+    assert np.isclose(float(res.best_loss), np.nanmin(losses), atol=1e-6)
+    assert int(res.best_iter) == int(np.nanargmin(losses))
+
+
+def test_quadratic_model_monotone(rng):
+    """CG decreases the quadratic model monotonically on SPD systems."""
+    n = 20
+    A = _spd(rng, n, cond=50)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg_solve(lambda v: {"x": jnp.asarray(A, jnp.float32) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=15)
+    quad = np.asarray(res.quad)
+    assert np.all(np.diff(quad) <= 1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 30), cond=st.floats(1.5, 1e3),
+       seed=st.integers(0, 1000))
+def test_cg_property_solves_spd(n, cond, seed):
+    rng = np.random.default_rng(seed)
+    A = _spd(rng, n, cond)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = cg_solve(lambda v: {"x": jnp.asarray(A, jnp.float32) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=2 * n + 10)
+    err = np.linalg.norm(np.asarray(res.x["x"]) - np.linalg.solve(A, b))
+    assert err < 1e-2 * max(1.0, np.linalg.norm(b))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-8, 1e8))
+def test_stabilize_rescaling_invariance(seed, scale):
+    """Sec. 4.2: the ||θ||/||v|| rescaling is algebraically a no-op in f32
+    over a huge range of v scales."""
+    from repro.core.curvature import make_curvature_ops
+    from repro.losses.sequence import CELoss
+
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (5, 7)) * 0.2}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (2, 3, 5)),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (2, 3), 0, 7)}
+    fwd = lambda p, b: (jnp.tanh(b["x"]) @ p["w"], 0.0)     # noqa: E731
+    ops = make_curvature_ops(fwd, CELoss(), params, batch, stabilize=True)
+    v = {"w": jax.random.normal(jax.random.fold_in(key, 3), (5, 7)) * scale}
+    gv = ops.gnvp(v)
+    gv_unit = ops.gnvp(jax.tree.map(lambda x: x / scale, v))
+    np.testing.assert_allclose(np.asarray(gv["w"]) / scale,
+                               np.asarray(gv_unit["w"]), rtol=1e-3,
+                               atol=1e-6 * scale if scale > 1 else 1e-9)

