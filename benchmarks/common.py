@@ -19,6 +19,24 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_compare(fns: dict, *args, warmup: int = 2, rounds: int = 12):
+    """Noise-robust A/B timing: interleave the candidates round-robin so
+    background load hits them equally, and report each one's *minimum*
+    wall time in microseconds (the standard load-insensitive estimator).
+    ``fns``: {name: callable}; every callable gets the same ``args``.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: t * 1e6 for name, t in best.items()}
+
+
 def emit(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row)

@@ -1,0 +1,74 @@
+"""Lattice-engine statistics-stage benchmark: per-backend ms/update.
+
+Times one jitted ``lattice_stats`` value+gradient evaluation (logZ +
+c_avg and their logit-factor grads, i.e. what MMI/MPE training executes
+per CG-batch update) for each engine backend on sausage batches.  Emits the standard CSV rows plus one
+machine-readable JSON row per (backend, shape) so dashboards can track
+the levelized-vs-per-arc speedup across commits:
+
+    {"bench": "lattice_engine", "backend": "levelized", "B": 8,
+     "S": 64, "A": 3, "ms_per_update": 1.23}
+
+(B = batch, S = segments/levels, A = alternatives per segment; the arc
+count is S*A.)
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_compare
+from repro.lattice_engine import lattice_stats
+from repro.losses.lattice import make_lattice_batch
+
+K = 32
+SEG_LEN = 4
+
+SHAPES = {                      # budget -> list of (B, n_seg, n_alt)
+    "small": [(8, 64, 3)],
+    "full": [(8, 64, 3), (8, 128, 4), (16, 64, 3)],
+}
+
+
+def backend_stage_fns(lat, lp, backends=("scan", "levelized", "pallas")):
+    """Jitted value+grad statistics-stage functions per backend (backends
+    that fail to trace/compile here are skipped with a note)."""
+    fns = {}
+    for backend in backends:
+        def stage(lp_, be=backend):
+            st = lattice_stats(lat, lp_, 0.5, backend=be)
+            return jnp.sum(st.logZ) - jnp.sum(st.c_avg)
+
+        fn = jax.jit(jax.value_and_grad(stage))
+        try:
+            jax.block_until_ready(fn(lp))
+        except Exception as e:                 # backend unavailable here
+            print(f"# lattice_engine.{backend} skipped: {e}")
+            continue
+        fns[backend] = fn
+    return fns
+
+
+def run(budget: str = "small"):
+    rows = []
+    for B, S, A in SHAPES.get(budget, SHAPES["small"]):
+        T = S * SEG_LEN
+        lat = make_lattice_batch(0, batch=B, num_frames=T, num_states=K,
+                                 seg_len=SEG_LEN, n_alt=A)
+        lp = jax.nn.log_softmax(
+            jax.random.normal(jax.random.PRNGKey(1), (B, T, K)), -1)
+        for backend, us in time_compare(backend_stage_fns(lat, lp),
+                                        lp).items():
+            rows.append(emit(
+                f"lattice_engine.{backend}.B{B}S{S}A{A}", us,
+                f"ms_per_update={us / 1e3:.3f}"))
+            print(json.dumps({"bench": "lattice_engine", "backend": backend,
+                              "B": B, "S": S, "A": A,
+                              "ms_per_update": round(us / 1e3, 4)}))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured artifact).
   cg_stability        — Sec. 4.2 (‖θ‖/‖v‖ rescaling) ablation
   precond_ablation    — Sec. 4.3 (shared-parameter preconditioning)
   kernel_bench        — Pallas kernel reference micro-benchmarks
+  lattice_engine_bench — per-backend statistics-stage timings (also emits
+                        machine-readable JSON rows: backend, B/S/A,
+                        ms_per_update)
   roofline            — per (arch x shape x mesh) roofline terms from the
                         multi-pod dry-run artifacts (results/dryrun/)
 """
@@ -21,15 +24,16 @@ import time
 def main() -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
-    from benchmarks import (cg_stability, kernel_bench, precond_ablation,
-                            table1_timing, table2_optimisers,
-                            table45_activations)
+    from benchmarks import (cg_stability, kernel_bench, lattice_engine_bench,
+                            precond_ablation, table1_timing,
+                            table2_optimisers, table45_activations)
     table1_timing.run()
     table2_optimisers.run()
     table45_activations.run()
     cg_stability.run()
     precond_ablation.run()
     kernel_bench.run()
+    lattice_engine_bench.run()
 
     from benchmarks import roofline
     rows = roofline.load_all()

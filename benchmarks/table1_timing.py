@@ -12,17 +12,21 @@ model (paper: modified forward prop 15.1 %, EBP 7.8 %, lattice statistics
 
 Exact percentages depend on CG batch size and lattice density; the
 qualitative claim reproduced is candidate evaluation dominating.
+
+Also times the statistics stage per lattice-engine backend (per-arc scan
+vs levelized scan) at B=8, S=64 so the levelized speedup is tracked in
+BENCH output (rows ``table1.lattice_stats_<backend>``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, time_compare
 from repro.configs.acoustic import LSTM
 from repro.core import tree_math as tm
 from repro.data.synthetic import asr_batch
-from repro.losses.forward_backward import forward_backward
+from repro.losses.lattice import make_lattice_batch
 from repro.losses.sequence import MPELoss
 from repro.models import acoustic
 
@@ -59,6 +63,27 @@ def run(budget: str = "small"):
                     ("lattice_stats", t_lat), ("candidate_eval", t_eval)):
         rows.append(emit(f"table1.{name}", t,
                          f"pct={100.0 * t / total:.1f}"))
+
+    # statistics stage per engine backend (B=8, S=64 segments, 192 arcs):
+    # loss + logit-factor gradient, the per-update work of Sec. 5.2
+    from benchmarks.lattice_engine_bench import backend_stage_fns
+    Bs, S = 8, 64
+    lat = make_lattice_batch(1, batch=Bs, num_frames=S * 4, num_states=40,
+                             seg_len=4, n_alt=3)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(key, (Bs, S * 4, 40)), -1)
+    backend_us = time_compare(
+        backend_stage_fns(lat, lp, backends=("scan", "levelized")), lp)
+    if {"scan", "levelized"} <= backend_us.keys():
+        speedup = backend_us["scan"] / max(backend_us["levelized"], 1e-9)
+        for backend, t in backend_us.items():
+            rows.append(emit(f"table1.lattice_stats_{backend}", t,
+                             f"B={Bs};S={S};speedup_vs_scan="
+                             f"{backend_us['scan'] / t:.2f}"))
+        print(f"# levelized speedup over per-arc scan: {speedup:.2f}x")
+    else:
+        print(f"# lattice backend comparison incomplete: timed "
+              f"{sorted(backend_us)}")
     return rows
 
 

@@ -1,57 +1,94 @@
-"""Pallas TPU kernel: lattice forward pass + expected correctness
-(confusion-network / sausage topology).
+"""Pallas TPU kernels: lattice forward AND backward passes + expected
+correctness (confusion-network / sausage topology).
 
-This is the compute hot-spot of the paper's "collecting statistics over
-lattices" stage (Table 1).  The general-DAG forward-backward lives in
-losses/forward_backward.py (pure JAX, lax.scan over topologically sorted
-arcs); this kernel is the TPU-native specialisation for sausage lattices
-(every arc of segment s connects to every arc of segment s-1 — the
-synthetic generator's topology, and the dominant topology of pruned
-confusion networks):
+This is the TPU-native backend of the levelized lattice engine
+(``repro.lattice_engine``), the compute hot-spot of the paper's
+"collecting statistics over lattices" stage (Table 1).  The engine owns
+backend dispatch: the general-DAG per-arc scan and the level-parallel scan
+live in ``repro/lattice_engine/{scan_backend,levelized}.py``; these kernels
+are the specialisation for sausage lattices (every arc of segment s
+connects to every arc of segment s-1 — the synthetic generator's topology,
+and the dominant topology of pruned confusion networks).  The engine
+gathers arc tensors into the (segments, alternatives) layout via
+``Lattice.level_arcs`` and wraps the pair of kernels in a
+``jax.custom_jvp`` so that ``jax.grad`` / ``jax.jvp`` flow through them
+via the closed-form occupancy identities (see
+``lattice_engine/pallas_backend.py``).
+
+Forward recursion (per utterance, sequential over segments s):
 
     in_log(s)   = logsumexp(alpha[s-1])
     alpha[s,a]  = score[s,a] + in_log(s)
     c_in(s)     = sum softmax(alpha[s-1]) * c_alpha[s-1]
     c_alpha[s,a]= corr[s,a] + c_in(s)
 
-TPU mapping: grid over the batch; per-utterance (S, A) score/corr tiles in
-VMEM; the sequential segment recursion runs inside the kernel with the
-running (alpha, c_alpha) rows resident in VMEM scratch — the HBM->VMEM
-traffic is one pass over the scores, vs. one gather per arc in the
-scan-based general path.
+Backward recursion (sequential over segments in reverse):
 
-Outputs: alpha (B,S,A), c_alpha (B,S,A), logZ (B,), c_avg (B,).
-Validated against ref.sausage_forward_ref in interpret mode.
+    beta[s,a]   = logsumexp_a'(score[s+1,a'] + beta[s+1,a'])   (0 at final)
+    c_beta[s,a] = sum softmax(score[s+1]+beta[s+1]) * (corr[s+1]+c_beta[s+1])
+
+Both kernels honour an arc ``mask`` (B,S,A): masked arcs score -inf and
+contribute nothing; a fully-masked segment (arc-count padding from
+``make_sausage_lattice(max_arcs=...)`` or batch-level levelization padding)
+passes the carry through unchanged, so ``logZ``/``c_avg`` are exact for
+ragged batches.
+
+TPU mapping: grid over the batch; per-utterance (S, A) score/corr/mask
+tiles in VMEM; the sequential segment recursion runs inside the kernel
+with the running carries in registers/VMEM scratch — the HBM->VMEM traffic
+is one pass over the scores, vs. one gather per arc in the scan-based
+general path.
+
+``interpret`` defaults to auto-detection: compiled on TPU backends,
+interpreter everywhere else (CPU CI containers).  Validated against
+ref.sausage_forward_ref / ref.sausage_backward_ref.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU lowering)
 
 NEG = -1e30
+_EPS = 1e-30
 
 
-def _fb_kernel(score_ref, corr_ref, alpha_ref, calpha_ref, logz_ref,
-               cavg_ref, *, num_segments: int, n_alt: int):
+def _auto_interpret(interpret: bool | None) -> bool:
+    """Compiled on TPU (or with REPRO_PALLAS_COMPILED=1), interpreter
+    elsewhere, unless explicitly forced by the caller."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_PALLAS_COMPILED") == "1":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+def _fwd_kernel(score_ref, corr_ref, mask_ref, alpha_ref, calpha_ref,
+                logz_ref, cavg_ref, *, num_segments: int):
     score = score_ref[...].astype(jnp.float32)      # (S, A)
     corr = corr_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
 
     def seg_step(s, carry):
         in_log, c_in = carry
-        row = score[s] + in_log                     # (A,)
-        c_row = corr[s] + c_in
+        m = mask[s]
+        valid = m > 0.5
+        seg_valid = jnp.max(m) > 0.5
+        row = jnp.where(valid, score[s] + in_log, NEG)
+        c_row = jnp.where(valid, corr[s] + c_in, 0.0)
         alpha_ref[s, :] = row
         calpha_ref[s, :] = c_row
-        m = row.max()
-        e = jnp.exp(row - m)
+        mx = row.max()
+        e = jnp.exp(row - mx) * m
         z = e.sum()
-        new_in_log = jnp.log(z) + m
-        w = e / z
-        new_c_in = jnp.sum(w * c_row)
+        new_in_log = jnp.where(seg_valid, jnp.log(jnp.maximum(z, _EPS)) + mx,
+                               in_log)
+        w = e / jnp.maximum(z, _EPS)
+        new_c_in = jnp.where(seg_valid, jnp.sum(w * c_row), c_in)
         return new_in_log, new_c_in
 
     in_log, c_in = jax.lax.fori_loop(
@@ -60,17 +97,56 @@ def _fb_kernel(score_ref, corr_ref, alpha_ref, calpha_ref, logz_ref,
     cavg_ref[0] = c_in
 
 
-def sausage_forward(scores, corr, *, interpret: bool = True):
-    """scores/corr: (B, S, A) per-arc acoustic+lm scores and correctness.
+def _bwd_kernel(score_ref, corr_ref, mask_ref, beta_ref, cbeta_ref,
+                *, num_segments: int):
+    score = score_ref[...].astype(jnp.float32)      # (S, A)
+    corr = corr_ref[...].astype(jnp.float32)
+    mask = mask_ref[...].astype(jnp.float32)
+
+    def seg_step(i, carry):
+        out_log, c_out = carry
+        s = num_segments - 1 - i
+        m = mask[s]
+        valid = m > 0.5
+        seg_valid = jnp.max(m) > 0.5
+        b_row = jnp.where(valid, out_log, NEG)
+        cb_row = jnp.where(valid, c_out, 0.0)
+        beta_ref[s, :] = b_row
+        cbeta_ref[s, :] = cb_row
+        row = jnp.where(valid, score[s] + b_row, NEG)
+        mx = row.max()
+        e = jnp.exp(row - mx) * m
+        z = e.sum()
+        new_out_log = jnp.where(seg_valid,
+                                jnp.log(jnp.maximum(z, _EPS)) + mx, out_log)
+        w = e / jnp.maximum(z, _EPS)
+        new_c_out = jnp.where(seg_valid, jnp.sum(w * (corr[s] + cb_row)),
+                              c_out)
+        return new_out_log, new_c_out
+
+    jax.lax.fori_loop(0, num_segments, seg_step,
+                      (jnp.float32(0.0), jnp.float32(0.0)))
+
+
+def _ones_mask(scores):
+    return jnp.ones(scores.shape, jnp.float32)
+
+
+def sausage_forward(scores, corr, mask=None, *, interpret: bool | None = None):
+    """scores/corr: (B, S, A) per-arc acoustic+lm scores and correctness;
+    mask: optional (B, S, A), nonzero = valid arc.
 
     Returns (alpha (B,S,A), c_alpha (B,S,A), logZ (B,), c_avg (B,)).
     """
     B, S, A = scores.shape
-    kernel = functools.partial(_fb_kernel, num_segments=S, n_alt=A)
+    if mask is None:
+        mask = _ones_mask(scores)
+    kernel = functools.partial(_fwd_kernel, num_segments=S)
     alpha, c_alpha, logz, cavg = pl.pallas_call(
         kernel,
         grid=(B,),
         in_specs=[
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
             pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
             pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
         ],
@@ -86,6 +162,38 @@ def sausage_forward(scores, corr, *, interpret: bool = True):
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
         ],
-        interpret=interpret,
-    )(scores, corr)
+        interpret=_auto_interpret(interpret),
+    )(scores, corr, mask.astype(jnp.float32))
     return alpha, c_alpha, logz[:, 0], cavg[:, 0]
+
+
+def sausage_backward(scores, corr, mask=None, *,
+                     interpret: bool | None = None):
+    """Backward (beta / c_beta) companion of :func:`sausage_forward`.
+
+    Returns (beta (B,S,A), c_beta (B,S,A)); beta excludes the arc's own
+    score (FBStats convention), so gamma = exp(alpha + beta - logZ).
+    """
+    B, S, A = scores.shape
+    if mask is None:
+        mask = _ones_mask(scores)
+    kernel = functools.partial(_bwd_kernel, num_segments=S)
+    beta, c_beta = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, S, A), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, A), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, A), jnp.float32),
+        ],
+        interpret=_auto_interpret(interpret),
+    )(scores, corr, mask.astype(jnp.float32))
+    return beta, c_beta

@@ -1,9 +1,9 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``use_pallas`` defaults to interpret-mode Pallas on CPU (the container has
-no TPU); on TPU runtimes set ``REPRO_PALLAS_COMPILED=1`` to run the
-compiled kernels.  Every wrapper has a pure-jnp fallback (ref.py) that is
-also what the distributed (GSPMD) model paths use — the kernels are the
+The lattice (sausage) kernels auto-detect their mode: compiled on TPU
+backends, interpret elsewhere (set ``REPRO_PALLAS_COMPILED=1`` to force
+compiled).  Every wrapper has a pure-jnp fallback (ref.py) that is also
+what the distributed (GSPMD) model paths use — the kernels are the
 single-chip hot-spot implementations.
 """
 from __future__ import annotations
@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.cg_fused import cg_fused_update as _cg_pallas
+from repro.kernels.lattice_fb import sausage_backward as _fb_bwd_pallas
 from repro.kernels.lattice_fb import sausage_forward as _fb_pallas
 from repro.kernels.swa_attention import swa_attention as _swa_pallas
 
@@ -29,10 +30,18 @@ def swa_attention(q, k, v, window: int, *, use_pallas: bool = True):
     return _swa_pallas(q, k, v, window, interpret=_interpret())
 
 
-def sausage_forward(scores, corr, *, use_pallas: bool = True):
+def sausage_forward(scores, corr, mask=None, *, use_pallas: bool = True):
     if not use_pallas:
-        return ref.sausage_forward_ref(scores, corr)
-    return _fb_pallas(scores, corr, interpret=_interpret())
+        return ref.sausage_forward_ref(scores, corr, mask)
+    # interpret=None auto-detects: compiled on TPU or with
+    # REPRO_PALLAS_COMPILED=1, interpreter elsewhere (lattice_fb handles it)
+    return _fb_pallas(scores, corr, mask, interpret=None)
+
+
+def sausage_backward(scores, corr, mask=None, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.sausage_backward_ref(scores, corr, mask)
+    return _fb_bwd_pallas(scores, corr, mask, interpret=None)
 
 
 def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool = True):

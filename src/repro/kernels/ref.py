@@ -19,26 +19,72 @@ def swa_attention_ref(q, k, v, window: int):
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def sausage_forward_ref(scores, corr):
-    """scores/corr: (B,S,A).  lax.scan reference of the sausage recursion."""
-    def per_utt(sc, co):
+_NEG = -1e30
+
+
+def sausage_forward_ref(scores, corr, mask=None):
+    """scores/corr: (B,S,A), optional mask (B,S,A; nonzero = valid arc).
+    lax.scan reference of the masked sausage forward recursion."""
+    if mask is None:
+        mask = jnp.ones(scores.shape, jnp.float32)
+
+    def per_utt(sc, co, mk):
         def step(carry, inp):
             in_log, c_in = carry
-            row_s, row_c = inp
-            row = row_s + in_log
-            c_row = row_c + c_in
+            row_s, row_c, row_m = inp
+            valid = row_m > 0.5
+            seg_valid = jnp.max(row_m) > 0.5
+            row = jnp.where(valid, row_s + in_log, _NEG)
+            c_row = jnp.where(valid, row_c + c_in, 0.0)
             m = row.max()
-            z = jnp.exp(row - m).sum()
-            new_log = jnp.log(z) + m
-            w = jnp.exp(row - new_log)
-            return (new_log, jnp.sum(w * c_row)), (row, c_row)
+            e = jnp.exp(row - m) * row_m
+            z = e.sum()
+            new_log = jnp.where(seg_valid, jnp.log(jnp.maximum(z, 1e-30)) + m,
+                                in_log)
+            w = e / jnp.maximum(z, 1e-30)
+            new_c = jnp.where(seg_valid, jnp.sum(w * c_row), c_in)
+            return (new_log, new_c), (row, c_row)
 
         (logz, cavg), (alpha, c_alpha) = jax.lax.scan(
             step, (jnp.float32(0.0), jnp.float32(0.0)),
-            (sc.astype(jnp.float32), co.astype(jnp.float32)))
+            (sc.astype(jnp.float32), co.astype(jnp.float32),
+             mk.astype(jnp.float32)))
         return alpha, c_alpha, logz, cavg
 
-    return jax.vmap(per_utt)(scores, corr)
+    return jax.vmap(per_utt)(scores, corr, mask)
+
+
+def sausage_backward_ref(scores, corr, mask=None):
+    """Reference of the masked sausage backward recursion: returns
+    (beta (B,S,A), c_beta (B,S,A)), beta excluding the arc's own score."""
+    if mask is None:
+        mask = jnp.ones(scores.shape, jnp.float32)
+
+    def per_utt(sc, co, mk):
+        def step(carry, inp):
+            out_log, c_out = carry
+            row_s, row_c, row_m = inp
+            valid = row_m > 0.5
+            seg_valid = jnp.max(row_m) > 0.5
+            b_row = jnp.where(valid, out_log, _NEG)
+            cb_row = jnp.where(valid, c_out, 0.0)
+            row = jnp.where(valid, row_s + b_row, _NEG)
+            m = row.max()
+            e = jnp.exp(row - m) * row_m
+            z = e.sum()
+            new_log = jnp.where(seg_valid, jnp.log(jnp.maximum(z, 1e-30)) + m,
+                                out_log)
+            w = e / jnp.maximum(z, 1e-30)
+            new_c = jnp.where(seg_valid, jnp.sum(w * (row_c + cb_row)), c_out)
+            return (new_log, new_c), (b_row, cb_row)
+
+        _, (beta, c_beta) = jax.lax.scan(
+            step, (jnp.float32(0.0), jnp.float32(0.0)),
+            (sc.astype(jnp.float32), co.astype(jnp.float32),
+             mk.astype(jnp.float32)), reverse=True)
+        return beta, c_beta
+
+    return jax.vmap(per_utt)(scores, corr, mask)
 
 
 def cg_fused_update_ref(alpha, x, v, r, bv):

@@ -1,0 +1,32 @@
+"""Levelized lattice engine: one differentiable forward-backward API over
+scan, level-parallel, and Pallas-kernel backends.
+
+    from repro.lattice_engine import lattice_stats
+    stats = lattice_stats(lat, log_probs, kappa, backend="auto")
+
+See ``api.py`` for dispatch semantics and the per-backend modules for the
+implementations.  ``MMILoss``/``MPELoss`` (``losses/sequence.py``) route
+through this package; ``losses/forward_backward.py`` is a thin
+compatibility shim over the scan backend.
+"""
+from repro.lattice_engine.api import (BACKENDS, lattice_is_sausage,
+                                      lattice_stats, resolve_backend)
+from repro.lattice_engine.common import (FBStats, arc_scores, finalize,
+                                         frame_state_occupancy)
+from repro.lattice_engine.levelized import forward_backward_levelized
+from repro.lattice_engine.pallas_backend import forward_backward_pallas
+from repro.lattice_engine.scan_backend import forward_backward_scan
+
+__all__ = [
+    "BACKENDS",
+    "FBStats",
+    "arc_scores",
+    "finalize",
+    "forward_backward_levelized",
+    "forward_backward_pallas",
+    "forward_backward_scan",
+    "frame_state_occupancy",
+    "lattice_is_sausage",
+    "lattice_stats",
+    "resolve_backend",
+]

@@ -1,0 +1,65 @@
+"""The one lattice-statistics entry point: ``lattice_stats``.
+
+    stats = lattice_stats(lat, log_probs, kappa, backend="auto")
+
+Backends (all produce the same arc-layout ``FBStats``):
+
+  * ``"scan"``      — per-arc ``lax.scan`` reference (O(A) sequential steps)
+  * ``"levelized"`` — level-parallel scan over ``Lattice.level_arcs``
+                      frontiers (O(levels) sequential steps)
+  * ``"pallas"``    — TPU sausage kernel pair behind a ``custom_jvp``
+                      (only valid for confusion-network topologies)
+  * ``"auto"``      — Pallas when the lattice is statically known to be a
+                      sausage and the default JAX backend is TPU; the
+                      levelized scan otherwise.  Inside ``jit`` the arrays
+                      are tracers, topology cannot be inspected, and auto
+                      resolves to the levelized scan — pass
+                      ``backend="pallas"`` explicitly (or resolve outside
+                      the jit boundary) to commit to the kernel path.
+                      ``REPRO_LATTICE_BACKEND`` overrides auto everywhere.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.lattice_engine.common import FBStats, lattice_is_sausage
+from repro.lattice_engine.levelized import forward_backward_levelized
+from repro.lattice_engine.pallas_backend import forward_backward_pallas
+from repro.lattice_engine.scan_backend import forward_backward_scan
+from repro.losses.lattice import Lattice
+
+BACKENDS = ("scan", "levelized", "pallas")
+
+_DISPATCH = {
+    "scan": forward_backward_scan,
+    "levelized": forward_backward_levelized,
+    "pallas": forward_backward_pallas,
+}
+
+
+def resolve_backend(backend: str, lat: Lattice) -> str:
+    """Turn 'auto' into a concrete backend name (see module docstring)."""
+    if backend != "auto":
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown lattice backend {backend!r}; expected one of "
+                f"{BACKENDS + ('auto',)}")
+        return backend
+    forced = os.environ.get("REPRO_LATTICE_BACKEND")
+    if forced:
+        if forced not in BACKENDS:
+            raise ValueError(
+                f"REPRO_LATTICE_BACKEND={forced!r} not in {BACKENDS}")
+        return forced
+    if jax.default_backend() == "tpu" and lattice_is_sausage(lat):
+        return "pallas"
+    return "levelized"
+
+
+def lattice_stats(lat: Lattice, log_probs, kappa: float,
+                  backend: str = "auto") -> FBStats:
+    """Differentiable lattice forward-backward statistics (one API over
+    the scan / levelized / Pallas backends)."""
+    return _DISPATCH[resolve_backend(backend, lat)](lat, log_probs, kappa)

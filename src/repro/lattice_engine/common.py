@@ -1,0 +1,173 @@
+"""Shared pieces of the lattice engine: the FBStats contract, arc scoring,
+log-semiring helpers, and the final reduction from (alpha, beta) to
+(logZ, gamma, c_avg).
+
+Every backend (per-arc scan, levelized scan, Pallas sausage kernels)
+produces the same ``FBStats`` in arc layout (B, A), so losses and tests
+are backend-agnostic.
+"""
+from __future__ import annotations
+
+import weakref
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.losses.lattice import Lattice
+
+NEG = -1e30
+
+
+class FBStats(NamedTuple):
+    alpha: jnp.ndarray       # (B, A) forward log score incl. the arc
+    beta: jnp.ndarray        # (B, A) backward log score excl. the arc
+    logZ: jnp.ndarray        # (B,) total lattice log score
+    gamma: jnp.ndarray       # (B, A) arc posterior
+    c_alpha: jnp.ndarray     # (B, A) expected partial correctness (incl.)
+    c_beta: jnp.ndarray      # (B, A) expected remaining correctness (excl.)
+    c_avg: jnp.ndarray       # (B,) expected total correctness
+    c_arc: jnp.ndarray       # (B, A) c_q = c_alpha + c_beta
+
+
+def arc_scores(lat: Lattice, log_probs: jnp.ndarray, kappa: float):
+    """Per-arc acoustic score: kappa * sum_{t in span} log p(label | o_t).
+
+    log_probs: (B, T, K) frame log-probabilities (log_softmax of logits).
+    Returns (B, A) f32.  Cumulative-sums the (T, K) grid once, then
+    gathers only the 2A span endpoints ((t, label) pairs flattened to one
+    axis) — O(T*K) streaming work + O(A) gathered elements, instead of
+    materialising a (T, A) per-arc gather.
+    """
+    B, T, K = log_probs.shape
+    cum = jnp.cumsum(log_probs, axis=1)
+    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
+    flat = cum.reshape(B, (T + 1) * K)                        # (B,(T+1)K)
+    lab = lat.label.astype(jnp.int32)
+    hi = jnp.take_along_axis(flat, lat.end_t * K + lab, axis=1)
+    lo = jnp.take_along_axis(flat, lat.start_t * K + lab, axis=1)
+    return kappa * (hi - lo)
+
+
+def gather_log(arr, idx):
+    """arr: (A,), idx: (...,) with -1 padding -> values with NEG at pads."""
+    safe = jnp.maximum(idx, 0)
+    return jnp.where(idx >= 0, arr[safe], NEG)
+
+
+def gather_lin(arr, idx, fill=0.0):
+    safe = jnp.maximum(idx, 0)
+    return jnp.where(idx >= 0, arr[safe], fill)
+
+
+def masked_logsumexp(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.maximum(m, NEG)
+    out = jnp.log(jnp.sum(jnp.exp(x - m), axis=axis)) + jnp.squeeze(m, axis)
+    return jnp.maximum(out, NEG)
+
+
+def finalize(lat: Lattice, alpha, beta, c_alpha, c_beta) -> FBStats:
+    """Reduce per-arc forward/backward scores to the full statistics set."""
+    final_alpha = jnp.where(lat.is_final & lat.arc_mask, alpha, NEG)
+    logZ = masked_logsumexp(final_alpha, axis=-1)               # (B,)
+    wf = jax.nn.softmax(final_alpha, axis=-1)
+    c_avg = jnp.sum(wf * c_alpha, axis=-1)
+    gamma = jnp.where(lat.arc_mask,
+                      jnp.exp(alpha + beta - logZ[:, None]), 0.0)
+    return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,
+                   c_alpha=c_alpha, c_beta=c_beta, c_avg=c_avg,
+                   c_arc=c_alpha + c_beta)
+
+
+def _concrete(x):
+    """numpy view of a lattice field, or None if traced/abstract."""
+    if x is None or isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return np.asarray(x)
+    except Exception:
+        return None
+
+
+def _is_sausage_uncached(lat: Lattice) -> bool:
+    la = _concrete(lat.level_arcs)
+    preds = _concrete(lat.preds)
+    mask = _concrete(lat.arc_mask)
+    is_start = _concrete(lat.is_start)
+    is_final = _concrete(lat.is_final)
+    if any(x is None for x in (la, preds, mask, is_start, is_final)):
+        return False
+    B = la.shape[0]
+    for b in range(B):
+        levels = [set(row[row >= 0].tolist()) for row in la[b]]
+        levels = [lv for lv in levels if lv]
+        if not levels:
+            return False
+        for li, lv in enumerate(levels):
+            prev = levels[li - 1] if li > 0 else set()
+            last = li == len(levels) - 1
+            for a in lv:
+                p = preds[b, a]
+                p = {int(x) for x in p[p >= 0] if mask[b, x]}
+                if li == 0:
+                    if not is_start[b, a] and p:
+                        return False
+                elif p != prev:
+                    return False
+                if bool(is_final[b, a]) != last:
+                    return False
+    return True
+
+
+_SAUSAGE_CACHE: dict = {}
+
+
+def lattice_is_sausage(lat: Lattice) -> bool:
+    """Static topology check: True iff every level is fully connected to
+    the previous one and exactly the last level's arcs are final — the
+    contract of the Pallas sausage kernels.  Returns False whenever the
+    lattice is traced (inside jit) or the check cannot be decided.
+
+    The O(B * arcs * preds) walk is memoized per ``level_arcs`` array
+    (lattices are immutable), so eager training loops pay it once.
+    """
+    key_obj = lat.level_arcs
+    if key_obj is None or isinstance(key_obj, jax.core.Tracer):
+        return False
+    k = id(key_obj)
+    hit = _SAUSAGE_CACHE.get(k)
+    if hit is not None and hit[0]() is key_obj:
+        return hit[1]
+    val = _is_sausage_uncached(lat)
+    try:
+        if len(_SAUSAGE_CACHE) > 256:
+            _SAUSAGE_CACHE.clear()
+        _SAUSAGE_CACHE[k] = (weakref.ref(key_obj), val)
+    except TypeError:                      # not weakref-able; skip caching
+        pass
+    return val
+
+
+def frame_state_occupancy(lat: Lattice, weights: jnp.ndarray,
+                          num_states: int) -> jnp.ndarray:
+    """Scatter per-arc weights onto (B, T, K) frame/state occupancies.
+
+    occ[b, t, k] = sum over arcs a with label k and t in [start, end).
+    Used by tests to cross-check VJP-derived occupancies and by the
+    benchmark reproducing the paper's statistics-collection stage.
+    """
+    B, A = weights.shape
+    T = lat.num_frames
+
+    def per_utt(start, end, label, w):
+        t = jnp.arange(T)
+        span = (t[None, :] >= start[:, None]) & (t[None, :] < end[:, None])
+        contrib = span * w[:, None]                          # (A, T)
+        out = jnp.zeros((T, num_states))
+        t_ix = jnp.broadcast_to(t[None, :], (A, T))
+        l_ix = jnp.broadcast_to(label[:, None], (A, T))
+        return out.at[t_ix, l_ix].add(contrib)
+
+    return jax.vmap(per_utt)(lat.start_t, lat.end_t, lat.label, weights)

@@ -1,0 +1,155 @@
+"""Level-parallel backend: scan over topological *levels*, not arcs.
+
+``Lattice.level_arcs`` (built once at batch-construction time in
+``losses/lattice.py``) groups arcs by topological depth.  Arcs within a
+level have no data dependencies, so each scan step updates a whole
+frontier with dense batched gathers + ``logsumexp``/softmax reductions:
+O(levels) sequential steps instead of O(arcs).  For the synthetic sausage
+batches that is a ``n_alt``-fold cut in scan length; for wide pruned
+lattices the win is the level width.
+
+Implementation notes:
+  * All per-arc tensors are re-ordered once into *level-major* layout
+    (L, W) — position (l, w) holds arc ``level_arcs[l, w]`` — so that each
+    scan step writes its frontier with one contiguous
+    ``dynamic_update_slice`` instead of a general scatter (the scatter was
+    the per-step bottleneck on CPU/TPU backends).
+  * Predecessor/successor ids are likewise remapped to level-major
+    positions up front; one extra "dump" slot at position L*W absorbs
+    padded ids (-1) and masked arcs, keeping every step a fixed-shape
+    dense op with no boolean reshuffling.
+  * Fully differentiable (plain jnp under ``lax.scan``), like the per-arc
+    reference backend, and agrees with it to float tolerance (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.lattice_engine.common import (NEG, FBStats, arc_scores, finalize,
+                                         masked_logsumexp)
+from repro.losses.lattice import Lattice
+
+
+def _level_major(level_arcs, *arc_fields):
+    """Re-order (A,) arc tensors into (L, W) level-major layout plus the
+    arc->position map (A+1,) used to remap pred/succ ids (dump slot at
+    position L*W for -1 pads and masked arcs)."""
+    L, W = level_arcs.shape
+    A = arc_fields[0].shape[0]
+    flat = level_arcs.reshape(-1)                              # (L*W,)
+    safe = jnp.where(flat >= 0, flat, A)
+    arc_pos = jnp.full((A + 1,), L * W, jnp.int32).at[safe].set(
+        jnp.where(flat >= 0, jnp.arange(L * W, dtype=jnp.int32), L * W))
+    outs = []
+    for f in arc_fields:
+        fill = jnp.zeros((), f.dtype)
+        g = jnp.where(flat >= 0, f[jnp.maximum(flat, 0)], fill)
+        outs.append(g.reshape(L, W))
+    return arc_pos, outs
+
+
+def _forward_levels(own, corr, preds, is_start, mask, level_arcs):
+    """Levelized forward recursion for one utterance.
+
+    own/corr: (A,); preds: (A, P); level_arcs: (L, W).
+    Returns alpha, c_alpha: (A,).
+    """
+    A = own.shape[0]
+    L, W = level_arcs.shape
+    arc_pos, (own_lv, corr_lv, start_lv, mask_lv) = _level_major(
+        level_arcs, own, corr, is_start, mask)
+    ok_lv = (level_arcs >= 0) & mask_lv                        # (L, W)
+    # predecessor ids in level-major positions, dump slot for pads
+    safe_arc = jnp.maximum(level_arcs, 0)
+    p = preds[safe_arc]                                        # (L, W, P)
+    pidx = jnp.where(p >= 0, arc_pos[jnp.maximum(p, 0)], L * W)
+
+    alpha0 = jnp.full((L * W + 1,), NEG)
+    c_alpha0 = jnp.zeros((L * W + 1,))
+
+    def body(carry, inp):
+        alpha, c_alpha, off = carry
+        own_l, corr_l, start_l, ok_l, pidx_l = inp
+        pa = alpha[pidx_l]                                     # (W, P)
+        pc = c_alpha[pidx_l]
+        in_log = masked_logsumexp(pa, axis=-1)                 # (W,)
+        w = jax.nn.softmax(pa, axis=-1)
+        c_in = jnp.sum(w * pc, axis=-1)
+        a_val = jnp.where(start_l, own_l, own_l + in_log)
+        c_val = corr_l + jnp.where(start_l, 0.0, c_in)
+        a_val = jnp.where(ok_l, a_val, NEG)
+        c_val = jnp.where(ok_l, c_val, 0.0)
+        alpha = jax.lax.dynamic_update_slice(alpha, a_val, (off,))
+        c_alpha = jax.lax.dynamic_update_slice(c_alpha, c_val, (off,))
+        return (alpha, c_alpha, off + W), None
+
+    (alpha, c_alpha, _), _ = jax.lax.scan(
+        body, (alpha0, c_alpha0, jnp.int32(0)),
+        (own_lv, corr_lv, start_lv, ok_lv, pidx))
+    return alpha[arc_pos[:A]], c_alpha[arc_pos[:A]]
+
+
+def _backward_levels(own, corr, succs, is_final, mask, level_arcs):
+    """Levelized backward recursion (reversed levels) for one utterance."""
+    A = own.shape[0]
+    L, W = level_arcs.shape
+    arc_pos, (final_lv, mask_lv) = _level_major(level_arcs, is_final, mask)
+    ok_lv = (level_arcs >= 0) & mask_lv
+    safe_arc = jnp.maximum(level_arcs, 0)
+    s = succs[safe_arc]                                        # (L, W, S)
+    sidx = jnp.where(s >= 0, arc_pos[jnp.maximum(s, 0)], L * W)
+    own_pad = jnp.concatenate(
+        [jnp.where(level_arcs.reshape(-1) >= 0,
+                   own[jnp.maximum(level_arcs.reshape(-1), 0)], NEG),
+         jnp.full((1,), NEG)])                                 # (L*W+1,)
+    corr_pad = jnp.concatenate(
+        [jnp.where(level_arcs.reshape(-1) >= 0,
+                   corr[jnp.maximum(level_arcs.reshape(-1), 0)], 0.0),
+         jnp.zeros((1,))])
+
+    beta0 = jnp.full((L * W + 1,), NEG)
+    c_beta0 = jnp.zeros((L * W + 1,))
+
+    def body(carry, inp):
+        beta, c_beta, off = carry
+        final_l, ok_l, sidx_l = inp
+        s_out = jnp.where(sidx_l < L * W, beta[sidx_l] + own_pad[sidx_l],
+                          NEG)                                 # (W, S)
+        sc = c_beta[sidx_l] + corr_pad[sidx_l]
+        out_log = masked_logsumexp(s_out, axis=-1)
+        w = jax.nn.softmax(s_out, axis=-1)
+        c_out = jnp.sum(w * sc, axis=-1)
+        b_val = jnp.where(final_l, 0.0, out_log)
+        c_val = jnp.where(final_l, 0.0, c_out)
+        b_val = jnp.where(ok_l, b_val, NEG)
+        c_val = jnp.where(ok_l, c_val, 0.0)
+        beta = jax.lax.dynamic_update_slice(beta, b_val, (off,))
+        c_beta = jax.lax.dynamic_update_slice(c_beta, c_val, (off,))
+        return (beta, c_beta, off - W), None
+
+    (beta, c_beta, _), _ = jax.lax.scan(
+        body, (beta0, c_beta0, jnp.int32((L - 1) * W)),
+        (final_lv[::-1], ok_lv[::-1], sidx[::-1]))
+    return beta[arc_pos[:A]], c_beta[arc_pos[:A]]
+
+
+def forward_backward_levelized(lat: Lattice, log_probs: jnp.ndarray,
+                               kappa: float) -> FBStats:
+    """Full lattice statistics via the level-parallel scan, vmapped over B."""
+    if lat.level_arcs is None:
+        raise ValueError(
+            "levelized backend needs Lattice.level_arcs; build batches with "
+            "repro.losses.lattice.batch_lattices (levelizes automatically)")
+    am = arc_scores(lat, log_probs, kappa) + lat.lm            # (B, A)
+
+    alpha, c_alpha = jax.vmap(_forward_levels)(
+        am, lat.corr, lat.preds, lat.is_start, lat.arc_mask, lat.level_arcs)
+    beta, c_beta = jax.vmap(_backward_levels)(
+        am, lat.corr, lat.succs, lat.is_final, lat.arc_mask, lat.level_arcs)
+    # arcs outside every level (mask padding) read the dump slot: NEG/0
+    alpha = jnp.where(lat.arc_mask, alpha, NEG)
+    beta = jnp.where(lat.arc_mask, beta, NEG)
+    c_alpha = jnp.where(lat.arc_mask, c_alpha, 0.0)
+    c_beta = jnp.where(lat.arc_mask, c_beta, 0.0)
+    return finalize(lat, alpha, beta, c_alpha, c_beta)

@@ -1,0 +1,132 @@
+"""Pallas backend: sausage-topology statistics on the TPU kernels.
+
+``Lattice.level_arcs`` doubles as the gather map from arc layout (B, A)
+into the kernels' (B, S, W) segment/alternative layout (levels are
+segments for a sausage).  The forward + backward kernels
+(``kernels/lattice_fb.py``) are not differentiable by ``jax.grad``
+directly — Pallas calls have no autodiff rules — so ``logZ`` and
+``c_avg`` are exposed through a ``jax.custom_jvp`` whose tangent rule uses
+the closed-form occupancy identities,
+
+    d logZ / d score_a   = gamma_a
+    d c_avg / d score_a  = gamma_a * (c_arc_a - c_avg)
+    d c_avg / d corr_a   = gamma_a
+
+with gamma/c_arc computed by one extra forward+backward kernel pass.  The
+rule is linear in the tangents, so JAX can both push JVPs through it (the
+R-operator in ``core/curvature.py``) and transpose it for ``jax.grad`` /
+VJPs — occupancy-based EBP, exactly the paper's Sec. 5.2 gradient.
+
+The auxiliary arc statistics (alpha, beta, gamma, ...) are returned as
+*constants* (no gradient flows through them); the losses only ever
+differentiate ``logZ``/``c_avg``, and under jit the unused direct kernel
+calls are dead-code-eliminated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lattice_fb import sausage_backward, sausage_forward
+from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
+                                         lattice_is_sausage)
+from repro.losses.lattice import Lattice
+
+
+def _to_sausage(lat: Lattice, values, fill):
+    """Gather (B, A) arc values into (B, S, W) via level_arcs."""
+    la = lat.level_arcs                                        # (B, S, W)
+    safe = jnp.maximum(la, 0)
+    g = jax.vmap(lambda v, i: v[i])(values, safe)
+    return jnp.where(la >= 0, g, fill)
+
+
+def _from_sausage(lat: Lattice, values_sg, fill):
+    """Scatter (B, S, W) values back to arc layout (B, A)."""
+    A = lat.num_arcs
+    flat_idx = lat.level_arcs.reshape(lat.level_arcs.shape[0], -1)
+    flat_val = values_sg.reshape(values_sg.shape[0], -1)
+
+    def per_utt(vals, idx):
+        out = jnp.full((A + 1,), fill)
+        safe = jnp.where(idx >= 0, idx, A)
+        return out.at[safe].set(jnp.where(idx >= 0, vals, fill))[:A]
+
+    return jax.vmap(per_utt)(flat_val, flat_idx)
+
+
+def _sausage_mask(lat: Lattice):
+    valid = lat.level_arcs >= 0
+    safe = jnp.maximum(lat.level_arcs, 0)
+    m = jax.vmap(lambda v, i: v[i])(lat.arc_mask, safe)
+    return (valid & m).astype(jnp.float32)
+
+
+@jax.custom_jvp
+def sausage_logz_cavg(scores_sg, corr_sg, mask_sg):
+    """Differentiable (logZ, c_avg) on sausage-layout tensors (B, S, W)."""
+    _, _, logz, cavg = sausage_forward(scores_sg, corr_sg, mask_sg)
+    return logz, cavg
+
+
+@sausage_logz_cavg.defjvp
+def _sausage_logz_cavg_jvp(primals, tangents):
+    scores_sg, corr_sg, mask_sg = primals
+    ds, dc, _ = tangents                      # mask tangent is symbolically 0
+    alpha, c_alpha, logz, cavg = sausage_forward(scores_sg, corr_sg, mask_sg)
+    beta, c_beta = sausage_backward(scores_sg, corr_sg, mask_sg)
+    gamma = jnp.where(mask_sg > 0.5,
+                      jnp.exp(alpha + beta - logz[:, None, None]), 0.0)
+    c_arc = c_alpha + c_beta
+    ds = ds.astype(jnp.float32) if hasattr(ds, "astype") else 0.0
+    dc = (dc.astype(jnp.float32)
+          if hasattr(dc, "astype") and dc.dtype != jax.dtypes.float0 else None)
+    dlogz = jnp.sum(gamma * ds, axis=(1, 2))
+    dcavg = jnp.sum(gamma * (c_arc - cavg[:, None, None]) * ds, axis=(1, 2))
+    if dc is not None:
+        dcavg = dcavg + jnp.sum(gamma * dc, axis=(1, 2))
+    return (logz, cavg), (dlogz, dcavg)
+
+
+def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
+                            kappa: float) -> FBStats:
+    """Full sausage-lattice statistics via the Pallas kernel pair.
+
+    Only ``logZ`` and ``c_avg`` carry gradients (see module docstring);
+    the per-arc fields are statistics-as-constants.
+    """
+    if lat.level_arcs is None:
+        raise ValueError(
+            "pallas backend needs Lattice.level_arcs; build batches with "
+            "repro.losses.lattice.batch_lattices (levelizes automatically)")
+    # the kernels assume full inter-level connectivity; catch misuse
+    # whenever the topology is statically inspectable (outside jit)
+    if not isinstance(lat.level_arcs, jax.core.Tracer) \
+            and not lattice_is_sausage(lat):
+        raise ValueError(
+            "pallas backend requires a sausage (confusion-network) "
+            "topology — every arc of level l connected to every arc of "
+            "level l-1 and only last-level arcs final; use the "
+            "'levelized' or 'scan' backend for general DAG lattices")
+    am = arc_scores(lat, log_probs, kappa) + lat.lm            # (B, A)
+    scores_sg = _to_sausage(lat, am, NEG)
+    corr_sg = _to_sausage(lat, lat.corr, 0.0)
+    mask_sg = _sausage_mask(lat)
+
+    logZ, c_avg = sausage_logz_cavg(scores_sg, corr_sg, mask_sg)
+
+    # constant (non-differentiable) per-arc statistics; DCE'd when unused
+    sg = jax.lax.stop_gradient((scores_sg, corr_sg))
+    alpha_sg, c_alpha_sg, logz_c, cavg_c = sausage_forward(*sg, mask_sg)
+    beta_sg, c_beta_sg = sausage_backward(*sg, mask_sg)
+    gamma_sg = jnp.where(mask_sg > 0.5,
+                         jnp.exp(alpha_sg + beta_sg - logz_c[:, None, None]),
+                         0.0)
+    alpha = _from_sausage(lat, alpha_sg, NEG)
+    beta = _from_sausage(lat, beta_sg, NEG)
+    c_alpha = _from_sausage(lat, c_alpha_sg, 0.0)
+    c_beta = _from_sausage(lat, c_beta_sg, 0.0)
+    gamma = _from_sausage(lat, gamma_sg, 0.0)
+    return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,
+                   c_alpha=c_alpha, c_beta=c_beta, c_avg=c_avg,
+                   c_arc=c_alpha + c_beta)

@@ -1,0 +1,78 @@
+"""Reference backend: per-arc ``lax.scan`` over topologically sorted arcs.
+
+O(A) sequential steps per utterance — slow, but the recursion is written
+exactly as the textbook forward-backward, so it anchors the numerical
+contract the faster backends (levelized scan, Pallas kernels) are tested
+against.  Fully differentiable by construction (plain jnp ops under
+``lax.scan``), including through the expected-correctness accumulators.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.lattice_engine.common import (NEG, FBStats, arc_scores, finalize,
+                                         gather_lin, gather_log,
+                                         masked_logsumexp)
+from repro.losses.lattice import Lattice
+
+
+def _forward_single(lat_score, lm, corr, preds, is_start, mask):
+    """Forward + expected-correctness recursion for one utterance."""
+    A = lat_score.shape[0]
+    own = lat_score + lm
+
+    def body(carry, a):
+        alpha, c_alpha = carry
+        pa = gather_log(alpha, preds[a])
+        pc = gather_lin(c_alpha, preds[a])
+        in_log = masked_logsumexp(pa)
+        w = jax.nn.softmax(jnp.where(preds[a] >= 0, pa, NEG))
+        c_in = jnp.sum(w * pc)
+        a_val = jnp.where(is_start[a], own[a], own[a] + in_log)
+        c_val = corr[a] + jnp.where(is_start[a], 0.0, c_in)
+        a_val = jnp.where(mask[a], a_val, NEG)
+        c_val = jnp.where(mask[a], c_val, 0.0)
+        alpha = alpha.at[a].set(a_val)
+        c_alpha = c_alpha.at[a].set(c_val)
+        return (alpha, c_alpha), None
+
+    init = (jnp.full((A,), NEG), jnp.zeros((A,)))
+    (alpha, c_alpha), _ = jax.lax.scan(body, init, jnp.arange(A))
+    return alpha, c_alpha
+
+
+def _backward_single(lat_score, lm, corr, succs, is_final, mask):
+    A = lat_score.shape[0]
+    own = lat_score + lm
+
+    def body(carry, a):
+        beta, c_beta = carry
+        s_out = gather_log(beta, succs[a]) + gather_lin(own, succs[a], NEG)
+        sc = gather_lin(c_beta, succs[a]) + gather_lin(corr, succs[a])
+        out_log = masked_logsumexp(s_out)
+        w = jax.nn.softmax(jnp.where(succs[a] >= 0, s_out, NEG))
+        c_out = jnp.sum(w * sc)
+        b_val = jnp.where(is_final[a], 0.0, out_log)
+        c_val = jnp.where(is_final[a], 0.0, c_out)
+        b_val = jnp.where(mask[a], b_val, NEG)
+        c_val = jnp.where(mask[a], c_val, 0.0)
+        beta = beta.at[a].set(b_val)
+        c_beta = c_beta.at[a].set(c_val)
+        return (beta, c_beta), None
+
+    init = (jnp.full((A,), NEG), jnp.zeros((A,)))
+    (beta, c_beta), _ = jax.lax.scan(body, init, jnp.arange(A)[::-1])
+    return beta, c_beta
+
+
+def forward_backward_scan(lat: Lattice, log_probs: jnp.ndarray,
+                          kappa: float) -> FBStats:
+    """Full lattice statistics via the per-arc scan, vmapped over B."""
+    am = arc_scores(lat, log_probs, kappa)                    # (B, A)
+
+    alpha, c_alpha = jax.vmap(_forward_single)(
+        am, lat.lm, lat.corr, lat.preds, lat.is_start, lat.arc_mask)
+    beta, c_beta = jax.vmap(_backward_single)(
+        am, lat.lm, lat.corr, lat.succs, lat.is_final, lat.arc_mask)
+    return finalize(lat, alpha, beta, c_alpha, c_beta)

@@ -1,157 +1,46 @@
-"""Differentiable lattice forward-backward (log semiring + expected
-correctness), the statistics engine for MMI / MPE losses (paper Secs. 2.3,
-3.2, 5.2).
+"""Compatibility shim over the levelized lattice engine.
 
-All recursions are ``lax.scan`` over topologically-sorted arcs so that
+The differentiable lattice forward-backward (log semiring + expected
+correctness, the statistics engine for MMI / MPE losses — paper Secs. 2.3,
+3.2, 5.2) now lives in ``repro.lattice_engine`` as one API with three
+interchangeable backends:
+
+  * ``scan``      — the original per-arc ``lax.scan`` over topologically
+                    sorted arcs (``lattice_engine/scan_backend.py``); kept
+                    as the numerical reference.
+  * ``levelized`` — level-parallel scan over the ``Lattice.level_arcs``
+                    frontier tensors (``lattice_engine/levelized.py``);
+                    O(levels) sequential steps instead of O(arcs).
+  * ``pallas``    — the TPU sausage kernel pair
+                    (``kernels/lattice_fb.py``) behind a ``custom_jvp``
+                    (``lattice_engine/pallas_backend.py``).
+
 ``jax.grad`` (EBP) and ``jax.jvp`` (the R-operator, Sec. 3.4) flow through
-them — occupancies are never hand-derived, they emerge as VJPs of these
-functions (validated against the closed forms in tests).
+every backend — scan/levelized by construction, Pallas via closed-form
+occupancy tangents — and all three agree to float tolerance (tested in
+``tests/test_lattice_engine.py``).
+
+This module re-exports the engine's stable names and keeps
+``forward_backward()`` (scan-backend semantics) for existing callers;
+new code should import from ``repro.lattice_engine`` and use
+``lattice_stats(..., backend=...)`` directly.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
-import jax
 import jax.numpy as jnp
 
+from repro.lattice_engine import (FBStats, arc_scores,  # noqa: F401
+                                  frame_state_occupancy, lattice_stats)
+from repro.lattice_engine.common import NEG  # noqa: F401
 from repro.losses.lattice import Lattice
 
-NEG = -1e30
+__all__ = ["FBStats", "arc_scores", "forward_backward",
+           "frame_state_occupancy"]
 
 
-def arc_scores(lat: Lattice, log_probs: jnp.ndarray, kappa: float):
-    """Per-arc acoustic score: kappa * sum_{t in span} log p(label | o_t).
-
-    log_probs: (B, T, K) frame log-probabilities (log_softmax of logits).
-    Returns (B, A) f32.  Uses a cumulative-sum gather so cost is O(A*T)
-    memory-free: cum[t, a] = sum_{u<t} lp[u, label_a].
-    """
-    lp_lab = jnp.take_along_axis(
-        log_probs, lat.label[:, None, :].astype(jnp.int32), axis=2)   # (B,T,A)
-    cum = jnp.cumsum(lp_lab, axis=1)
-    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)  # (B,T+1,A)
-    hi = jnp.take_along_axis(cum, lat.end_t[:, None, :], axis=1)[:, 0]
-    lo = jnp.take_along_axis(cum, lat.start_t[:, None, :], axis=1)[:, 0]
-    return kappa * (hi - lo)
-
-
-def _gather(arr, idx):
-    """arr: (A,), idx: (P,) with -1 padding -> values with NEG at pads."""
-    safe = jnp.maximum(idx, 0)
-    return jnp.where(idx >= 0, arr[safe], NEG)
-
-
-def _gather_w(arr, idx, fill=0.0):
-    safe = jnp.maximum(idx, 0)
-    return jnp.where(idx >= 0, arr[safe], fill)
-
-
-def _logsumexp(x, axis=-1):
-    m = jnp.max(x, axis=axis, keepdims=True)
-    m = jnp.maximum(m, NEG)
-    out = jnp.log(jnp.sum(jnp.exp(x - m), axis=axis)) + jnp.squeeze(m, axis)
-    return jnp.maximum(out, NEG)
-
-
-class FBStats(NamedTuple):
-    alpha: jnp.ndarray       # (B, A) forward log score incl. the arc
-    beta: jnp.ndarray        # (B, A) backward log score excl. the arc
-    logZ: jnp.ndarray        # (B,) total lattice log score
-    gamma: jnp.ndarray       # (B, A) arc posterior
-    c_alpha: jnp.ndarray     # (B, A) expected partial correctness (incl.)
-    c_beta: jnp.ndarray      # (B, A) expected remaining correctness (excl.)
-    c_avg: jnp.ndarray       # (B,) expected total correctness
-    c_arc: jnp.ndarray       # (B, A) c_q = c_alpha + c_beta
-
-
-def _forward_single(lat_score, lm, corr, preds, is_start, mask):
-    """Forward + expected-correctness recursion for one utterance."""
-    A = lat_score.shape[0]
-    own = lat_score + lm
-
-    def body(carry, a):
-        alpha, c_alpha = carry
-        pa = _gather(alpha, preds[a])
-        pc = _gather_w(c_alpha, preds[a])
-        in_log = _logsumexp(pa)
-        w = jax.nn.softmax(jnp.where(preds[a] >= 0, pa, NEG))
-        c_in = jnp.sum(w * pc)
-        a_val = jnp.where(is_start[a], own[a], own[a] + in_log)
-        c_val = corr[a] + jnp.where(is_start[a], 0.0, c_in)
-        a_val = jnp.where(mask[a], a_val, NEG)
-        c_val = jnp.where(mask[a], c_val, 0.0)
-        alpha = alpha.at[a].set(a_val)
-        c_alpha = c_alpha.at[a].set(c_val)
-        return (alpha, c_alpha), None
-
-    init = (jnp.full((A,), NEG), jnp.zeros((A,)))
-    (alpha, c_alpha), _ = jax.lax.scan(body, init, jnp.arange(A))
-    return alpha, c_alpha
-
-
-def _backward_single(lat_score, lm, corr, succs, is_final, mask):
-    A = lat_score.shape[0]
-    own = lat_score + lm
-
-    def body(carry, a):
-        beta, c_beta = carry
-        s_out = _gather(beta, succs[a]) + _gather_w(own, succs[a], NEG)
-        sc = _gather_w(c_beta, succs[a]) + _gather_w(corr, succs[a])
-        out_log = _logsumexp(s_out)
-        w = jax.nn.softmax(jnp.where(succs[a] >= 0, s_out, NEG))
-        c_out = jnp.sum(w * sc)
-        b_val = jnp.where(is_final[a], 0.0, out_log)
-        c_val = jnp.where(is_final[a], 0.0, c_out)
-        b_val = jnp.where(mask[a], b_val, NEG)
-        c_val = jnp.where(mask[a], c_val, 0.0)
-        beta = beta.at[a].set(b_val)
-        c_beta = c_beta.at[a].set(c_val)
-        return (beta, c_beta), None
-
-    init = (jnp.full((A,), NEG), jnp.zeros((A,)))
-    (beta, c_beta), _ = jax.lax.scan(body, init, jnp.arange(A)[::-1])
-    return beta, c_beta
-
-
-def forward_backward(lat: Lattice, log_probs: jnp.ndarray,
-                     kappa: float) -> FBStats:
-    """Full lattice statistics, vmapped over the batch."""
-    am = arc_scores(lat, log_probs, kappa)                    # (B, A)
-
-    alpha, c_alpha = jax.vmap(_forward_single)(
-        am, lat.lm, lat.corr, lat.preds, lat.is_start, lat.arc_mask)
-    beta, c_beta = jax.vmap(_backward_single)(
-        am, lat.lm, lat.corr, lat.succs, lat.is_final, lat.arc_mask)
-
-    final_alpha = jnp.where(lat.is_final & lat.arc_mask, alpha, NEG)
-    logZ = _logsumexp(final_alpha, axis=-1)                   # (B,)
-    wf = jax.nn.softmax(final_alpha, axis=-1)
-    c_avg = jnp.sum(wf * c_alpha, axis=-1)
-    gamma = jnp.where(lat.arc_mask,
-                      jnp.exp(alpha + beta - logZ[:, None]), 0.0)
-    return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,
-                   c_alpha=c_alpha, c_beta=c_beta, c_avg=c_avg,
-                   c_arc=c_alpha + c_beta)
-
-
-def frame_state_occupancy(lat: Lattice, weights: jnp.ndarray,
-                          num_states: int) -> jnp.ndarray:
-    """Scatter per-arc weights onto (B, T, K) frame/state occupancies.
-
-    occ[b, t, k] = sum over arcs a with label k and t in [start, end).
-    Used by tests to cross-check VJP-derived occupancies and by the
-    benchmark reproducing the paper's statistics-collection stage.
-    """
-    B, A = weights.shape
-    T = lat.num_frames
-
-    def per_utt(start, end, label, w):
-        t = jnp.arange(T)
-        span = (t[None, :] >= start[:, None]) & (t[None, :] < end[:, None])
-        contrib = span * w[:, None]                          # (A, T)
-        out = jnp.zeros((T, num_states))
-        t_ix = jnp.broadcast_to(t[None, :], (A, T))
-        l_ix = jnp.broadcast_to(label[:, None], (A, T))
-        return out.at[t_ix, l_ix].add(contrib)
-
-    return jax.vmap(per_utt)(lat.start_t, lat.end_t, lat.label, weights)
+def forward_backward(lat: Lattice, log_probs: jnp.ndarray, kappa: float,
+                     backend: str = "scan") -> FBStats:
+    """Full lattice statistics.  Defaults to the per-arc scan reference
+    backend; pass ``backend="levelized"|"pallas"|"auto"`` to pick another
+    engine backend."""
+    return lattice_stats(lat, log_probs, kappa, backend=backend)

@@ -6,6 +6,15 @@ language/transition score, and a correctness count against the reference
 (for MBR/MPE).  All per-utterance tensors are padded to a static number of
 arcs ``A`` with ``arc_mask`` so batches stack and shard cleanly.
 
+Batch construction also *levelizes* the DAG: ``level_arcs`` is a (L, W)
+frontier index tensor grouping arcs by topological depth (level l holds
+every arc whose longest predecessor chain has length l, -1 padded to the
+widest level).  Arcs within a level have no data dependencies, so the
+lattice-engine backends (``repro.lattice_engine``) can run the
+forward-backward recursion as O(levels) dense batched steps instead of
+O(arcs) sequential ones — and the Pallas sausage kernel uses the same
+tensor to gather arc data into its (segments, alternatives) layout.
+
 No MGB data ships with this container (see DESIGN.md assumption log), so a
 synthetic *sausage* generator produces confusion-network-style lattices:
 the utterance is segmented; each segment has ``n_alt`` competing arcs (one
@@ -36,6 +45,8 @@ class Lattice(NamedTuple):
     arc_mask: jnp.ndarray     # (B, A) bool, valid arcs
     ref_states: jnp.ndarray   # (B, T) int32, reference state alignment
     num_ref_units: jnp.ndarray  # (B,) f32, #reference phones (normaliser)
+    level_arcs: jnp.ndarray = None  # (B, L, W) int32, arcs by topo level
+    #                                  (-1 pad); see levelize_arcs()
 
     @property
     def num_arcs(self):
@@ -44,6 +55,45 @@ class Lattice(NamedTuple):
     @property
     def num_frames(self):
         return self.ref_states.shape[-1]
+
+    @property
+    def num_levels(self):
+        return self.level_arcs.shape[-2]
+
+
+def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,
+                  arc_mask: np.ndarray) -> np.ndarray:
+    """Topological levelization of one lattice's arc DAG (numpy, unbatched).
+
+    level(a) = 0 for start arcs, else 1 + max(level(pred)).  Requires arcs
+    to be topologically sorted by id (predecessors before successors),
+    which both the synthetic generator and standard lattice dumps satisfy.
+    Masked arcs are excluded.  Returns (L, W) int32 with -1 padding.
+    """
+    A = preds.shape[0]
+    level = np.full(A, -1, np.int64)
+    for a in range(A):
+        if not arc_mask[a]:
+            continue
+        ps = preds[a]
+        ps = ps[ps >= 0]
+        ps = ps[arc_mask[ps]] if ps.size else ps
+        if is_start[a] or ps.size == 0:
+            level[a] = 0
+        else:
+            lp = level[ps]
+            if (lp < 0).any():
+                raise ValueError(
+                    "levelize_arcs: arcs are not topologically sorted "
+                    f"(arc {a} has an unlevelled predecessor)")
+            level[a] = lp.max() + 1
+    n_levels = int(level.max()) + 1 if (level >= 0).any() else 0
+    groups = [np.where(level == lv)[0] for lv in range(n_levels)]
+    width = max((len(g) for g in groups), default=0)
+    out = -np.ones((max(n_levels, 1), max(width, 1)), np.int32)
+    for lv, g in enumerate(groups):
+        out[lv, :len(g)] = g
+    return out
 
 
 def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
@@ -100,10 +150,31 @@ def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
             out[k] = np.pad(out[k], (0, pad))
         out["preds"] = np.pad(out["preds"], ((0, pad), (0, 0)), constant_values=-1)
         out["succs"] = np.pad(out["succs"], ((0, pad), (0, 0)), constant_values=-1)
+    out["level_arcs"] = levelize_arcs(out["preds"], out["is_start"],
+                                      out["arc_mask"])
     return out
 
 
 def batch_lattices(lats: list[dict]) -> Lattice:
+    lats = [dict(l) for l in lats]
+    for l in lats:
+        if "level_arcs" not in l:
+            l["level_arcs"] = levelize_arcs(l["preds"], l["is_start"],
+                                            l["arc_mask"])
+    # pad ragged index tensors so the batch stacks: pred/succ fan-in
+    # widths and level counts/widths vary per lattice (ragged *arc*
+    # counts are the caller's job via make_sausage_lattice(max_arcs=...))
+    for l in lats:
+        for k in ("preds", "succs"):
+            cols = max(x[k].shape[1] for x in lats)
+            l[k] = np.pad(l[k], ((0, 0), (0, cols - l[k].shape[1])),
+                          constant_values=-1)
+        la = l["level_arcs"]
+        rows = max(x["level_arcs"].shape[0] for x in lats)
+        cols = max(x["level_arcs"].shape[1] for x in lats)
+        l["level_arcs"] = np.pad(la, ((0, rows - la.shape[0]),
+                                      (0, cols - la.shape[1])),
+                                 constant_values=-1)
     stacked = {k: jnp.asarray(np.stack([l[k] for l in lats])) for k in lats[0]}
     return Lattice(**stacked)
 

@@ -31,7 +31,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.losses.forward_backward import forward_backward
+from repro.lattice_engine import lattice_stats
 from repro.losses.lattice import Lattice
 
 
@@ -92,18 +92,22 @@ class MMILoss:
     """L = -(1/(B·T)) Σ_b (num_score_b - logZ_den_b).
 
     batch["lattice"]: Lattice.  The numerator is the reference state
-    alignment (its LM score is a constant w.r.t. θ and is dropped)."""
+    alignment (its LM score is a constant w.r.t. θ and is dropped).
+
+    ``backend`` selects the lattice-engine statistics backend ("auto"
+    dispatches: Pallas sausage kernels on TPU, levelized scan elsewhere)."""
 
     name = "mmi"
 
-    def __init__(self, kappa: float = 1.0):
+    def __init__(self, kappa: float = 1.0, backend: str = "auto"):
         self.kappa = kappa
+        self.backend = backend
 
     def _parts(self, logits, lat: Lattice):
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
         num = self.kappa * jnp.take_along_axis(
             lp, lat.ref_states[..., None], -1)[..., 0].sum(-1)      # (B,)
-        stats = forward_backward(lat, lp, self.kappa)
+        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend)
         return num, stats
 
     def value(self, logits, batch):
@@ -149,14 +153,15 @@ class MPELoss:
 
     name = "mpe"
 
-    def __init__(self, kappa: float = 1.0):
+    def __init__(self, kappa: float = 1.0, backend: str = "auto"):
         self.kappa = kappa
-        self._mmi = MMILoss(kappa)
+        self.backend = backend
+        self._mmi = MMILoss(kappa, backend=backend)
 
     def value(self, logits, batch):
         lat: Lattice = batch["lattice"]
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        stats = forward_backward(lat, lp, self.kappa)
+        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend)
         acc = stats.c_avg / jnp.maximum(lat.num_ref_units, 1.0)
         loss = -jnp.mean(acc)
         return loss, {"mpe_acc": jnp.mean(acc), "logZ": stats.logZ.mean()}
@@ -182,11 +187,11 @@ class MPELoss:
         return self._mmi.fisher_vp(logits, batch, u)
 
 
-def get_loss(name: str, kappa: float = 1.0):
+def get_loss(name: str, kappa: float = 1.0, backend: str = "auto"):
     if name == "ce":
         return CELoss()
     if name == "mmi":
-        return MMILoss(kappa)
+        return MMILoss(kappa, backend=backend)
     if name == "mpe":
-        return MPELoss(kappa)
+        return MPELoss(kappa, backend=backend)
     raise ValueError(name)

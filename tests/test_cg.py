@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -r "
+    "requirements-dev.txt); skipping property-based tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import tree_math as tm
 from repro.core.cg import cg_solve

@@ -1,0 +1,190 @@
+"""Lattice-engine backend equivalence + differentiability guarantees.
+
+Deliberately hypothesis-free (plain parametrize over seeds) so this file
+runs even in containers without the property-testing extra: it is the
+tier-1 guard for the scan / levelized / Pallas backend contract and for
+the Pallas ``custom_jvp`` that MMI/MPE training differentiates through.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.lattice_engine import (BACKENDS, lattice_is_sausage,
+                                  lattice_stats, resolve_backend)
+from repro.losses.forward_backward import forward_backward
+from repro.losses.lattice import (batch_lattices, make_lattice_batch,
+                                  make_sausage_lattice)
+from repro.losses.sequence import MMILoss, MPELoss
+
+K = 10
+ARC_FIELDS = ("alpha", "beta", "gamma", "c_alpha", "c_beta", "c_arc")
+UTT_FIELDS = ("logZ", "c_avg")
+
+
+def _uniform_batch(seed, T=24, seg_len=4, n_alt=3, B=2):
+    lat = make_lattice_batch(seed, batch=B, num_frames=T, num_states=K,
+                             seg_len=seg_len, n_alt=n_alt)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(seed + 100), (B, T, K)), -1)
+    return lat, lp
+
+
+def _padded_batch(seed, T=24, max_arcs=20):
+    """Ragged batch: different segmentations + arc-count padding."""
+    rng = np.random.default_rng(seed)
+    lats = [
+        make_sausage_lattice(rng, num_frames=T, num_states=K, seg_len=4,
+                             n_alt=3, max_arcs=max_arcs),
+        make_sausage_lattice(rng, num_frames=T, num_states=K, seg_len=8,
+                             n_alt=2, max_arcs=max_arcs),
+    ]
+    lat = batch_lattices(lats)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(seed + 200), (2, T, K)), -1)
+    return lat, lp
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("padded", [False, True])
+def test_three_backends_agree(seed, padded):
+    lat, lp = _padded_batch(seed) if padded else _uniform_batch(seed)
+    stats = {b: lattice_stats(lat, lp, kappa=0.8, backend=b)
+             for b in BACKENDS}
+    for field in ARC_FIELDS + UTT_FIELDS:
+        want = np.asarray(getattr(stats["scan"], field))
+        for b in ("levelized", "pallas"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(stats[b], field)), want, atol=1e-4,
+                err_msg=f"{b}.{field} (seed={seed}, padded={padded})")
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_padded_arcs_do_not_corrupt_stats(seed):
+    """A lattice padded with max_arcs must give the same logZ/c_avg as the
+    identical unpadded lattice, on every backend."""
+    rng1 = np.random.default_rng(seed)
+    rng2 = np.random.default_rng(seed)
+    plain = make_sausage_lattice(rng1, num_frames=24, num_states=K,
+                                 seg_len=4, n_alt=3)
+    padded = make_sausage_lattice(rng2, num_frames=24, num_states=K,
+                                  seg_len=4, n_alt=3, max_arcs=30)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(seed), (1, 24, K)), -1)
+    base = lattice_stats(batch_lattices([plain]), lp, 1.0, backend="scan")
+    for b in BACKENDS:
+        got = lattice_stats(batch_lattices([padded]), lp, 1.0, backend=b)
+        np.testing.assert_allclose(np.asarray(got.logZ),
+                                   np.asarray(base.logZ), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.c_avg),
+                                   np.asarray(base.c_avg), atol=1e-4)
+        # pad arcs carry no posterior mass
+        assert np.asarray(got.gamma)[:, plain["lm"].shape[0]:].max() == 0.0
+
+
+@pytest.mark.parametrize("loss_cls", [MMILoss, MPELoss])
+def test_pallas_grad_matches_scan_and_fd(loss_cls):
+    """jax.grad through the Pallas custom_jvp == scan-backend autodiff,
+    and both match central finite differences (guards the MMILoss.gn_vp /
+    occupancy identities in losses/sequence.py)."""
+    lat, lp_unused = _uniform_batch(7)
+    logits = jax.random.normal(jax.random.PRNGKey(11), (2, 24, K))
+
+    f_scan = lambda lg: loss_cls(kappa=0.8, backend="scan").value(  # noqa: E731
+        lg, {"lattice": lat})[0]
+    f_pal = lambda lg: loss_cls(kappa=0.8, backend="pallas").value(  # noqa: E731
+        lg, {"lattice": lat})[0]
+    g_scan = jax.grad(f_scan)(logits)
+    g_pal = jax.grad(f_pal)(logits)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_scan),
+                               atol=2e-5)
+    d = jax.random.normal(jax.random.PRNGKey(13), logits.shape)
+    eps = 1e-2                      # f32 round-off dominates below ~3e-3
+    fd = (f_pal(logits + eps * d) - f_pal(logits - eps * d)) / (2 * eps)
+    assert abs(float(fd) - float(jnp.vdot(g_pal, d))) < 1e-4
+
+
+@pytest.mark.parametrize("loss_cls", [MMILoss, MPELoss])
+def test_pallas_jvp_matches_scan(loss_cls):
+    """The R-operator direction (jax.jvp) agrees across backends — the
+    custom_jvp tangent rule is the closed-form occupancy identity."""
+    lat, _ = _uniform_batch(3)
+    logits = jax.random.normal(jax.random.PRNGKey(17), (2, 24, K))
+    d = jax.random.normal(jax.random.PRNGKey(19), logits.shape)
+    jvps = {}
+    for b in BACKENDS:
+        f = lambda lg: loss_cls(kappa=0.8, backend=b).value(  # noqa: E731
+            lg, {"lattice": lat})[0]
+        _, jvps[b] = jax.jvp(f, (logits,), (d,))
+    for b in ("levelized", "pallas"):
+        assert abs(float(jvps[b]) - float(jvps["scan"])) < 1e-5, b
+
+
+def test_backends_work_under_jit():
+    lat, lp = _uniform_batch(2)
+    vals = [jax.jit(lambda lp_, b=b: lattice_stats(lat, lp_, 1.0,
+                                                   backend=b).logZ)(lp)
+            for b in BACKENDS]
+    for v in vals[1:]:
+        np.testing.assert_allclose(np.asarray(v), np.asarray(vals[0]),
+                                   atol=1e-4)
+
+
+def test_auto_dispatch_and_sausage_detection(monkeypatch):
+    lat, lp = _uniform_batch(0)
+    assert lattice_is_sausage(lat)
+    # concrete + CPU -> levelized (pallas only auto-selected on TPU)
+    assert resolve_backend("auto", lat) in ("levelized", "pallas")
+    monkeypatch.setenv("REPRO_LATTICE_BACKEND", "scan")
+    assert resolve_backend("auto", lat) == "scan"
+    monkeypatch.delenv("REPRO_LATTICE_BACKEND")
+    with pytest.raises(ValueError):
+        resolve_backend("nope", lat)
+    # traced lattices cannot be inspected -> never pallas via auto
+    traced = jax.jit(lambda l, lp_: lattice_stats(l, lp_, 1.0,
+                                                  backend="auto").logZ)
+    np.testing.assert_allclose(np.asarray(traced(lat, lp)),
+                               np.asarray(lattice_stats(
+                                   lat, lp, 1.0, "scan").logZ), atol=1e-4)
+
+
+def test_non_sausage_rejected_for_pallas_auto():
+    """Breaking full connectivity must fail the static sausage check."""
+    rng = np.random.default_rng(0)
+    d = make_sausage_lattice(rng, num_frames=16, num_states=K, seg_len=4,
+                             n_alt=2)
+    d["preds"][2, 1] = -1          # arc 2 no longer sees every level-0 arc
+    lat = batch_lattices([d])
+    assert not lattice_is_sausage(lat)
+
+
+def test_forward_backward_shim_matches_engine():
+    lat, lp = _uniform_batch(4)
+    a = forward_backward(lat, lp, kappa=1.0)
+    b = lattice_stats(lat, lp, 1.0, backend="scan")
+    for field in ARC_FIELDS + UTT_FIELDS:
+        np.testing.assert_allclose(np.asarray(getattr(a, field)),
+                                   np.asarray(getattr(b, field)), atol=0.0)
+
+
+def test_sausage_kernels_match_refs():
+    """Masked fwd+bwd Pallas kernels == pure-jnp oracles (replaces the
+    hypothesis-gated sweep for containers without hypothesis)."""
+    key = jax.random.PRNGKey(0)
+    B, S, A = 3, 6, 4
+    sc = jax.random.normal(key, (B, S, A))
+    co = (jax.random.uniform(jax.random.fold_in(key, 1), (B, S, A)) > 0.5
+          ).astype(jnp.float32)
+    mask = np.ones((B, S, A), np.float32)
+    mask[0, 4:, :] = 0             # fully-masked trailing segments
+    mask[1, 2, 1:] = 0             # partially-masked segment
+    mask = jnp.asarray(mask)
+    for got, want in zip(ops.sausage_forward(sc, co, mask),
+                         ref.sausage_forward_ref(sc, co, mask)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+    for got, want in zip(ops.sausage_backward(sc, co, mask),
+                         ref.sausage_backward_ref(sc, co, mask)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -r "
+    "requirements-dev.txt); skipping property-based tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.losses.forward_backward import forward_backward
 from repro.losses.lattice import make_lattice_batch
