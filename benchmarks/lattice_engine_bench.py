@@ -51,8 +51,9 @@ def backend_stage_fns(lat, lp, backends=("scan", "levelized", "pallas")):
     return fns
 
 
-def run(budget: str = "small"):
+def run(budget: str = "small", json_out: str | None = None):
     rows = []
+    json_rows = []
     for B, S, A in SHAPES.get(budget, SHAPES["small"]):
         T = S * SEG_LEN
         lat = make_lattice_batch(0, batch=B, num_frames=T, num_states=K,
@@ -64,11 +65,27 @@ def run(budget: str = "small"):
             rows.append(emit(
                 f"lattice_engine.{backend}.B{B}S{S}A{A}", us,
                 f"ms_per_update={us / 1e3:.3f}"))
-            print(json.dumps({"bench": "lattice_engine", "backend": backend,
-                              "B": B, "S": S, "A": A,
-                              "ms_per_update": round(us / 1e3, 4)}))
+            rec = {"bench": "lattice_engine", "backend": backend,
+                   "B": B, "S": S, "A": A,
+                   "ms_per_update": round(us / 1e3, 4)}
+            json_rows.append(rec)
+            print(json.dumps(rec))
+    if json_out:
+        # the persisted trajectory: one fixed small shape set per commit so
+        # dashboards (and CI artifacts) can diff across history
+        with open(json_out, "w") as f:
+            json.dump({"bench": "lattice_engine", "budget": budget,
+                       "device": jax.devices()[0].platform,
+                       "rows": json_rows}, f, indent=1)
+        print(f"# wrote {len(json_rows)} rows to {json_out}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small", choices=sorted(SHAPES))
+    ap.add_argument("--json-out", default=None,
+                    help="persist JSON rows (e.g. BENCH_lattice.json)")
+    args = ap.parse_args()
+    run(args.budget, json_out=args.json_out)

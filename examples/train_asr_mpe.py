@@ -3,8 +3,11 @@ sequence training (MPE) of an LSTM acoustic model with NGHF vs baselines.
 
     PYTHONPATH=src python examples/train_asr_mpe.py [--updates 8]
 
-Pipeline (mirrors paper Secs. 7-8 on synthetic data — no MGB in this
-container, see DESIGN.md):
+This is a thin wrapper over the distributed launch layer: every training
+loop below is ``repro.launch.train.train_sequence`` — the same driver that
+serves the LLM archetypes (``--arch lstm-asr`` from the CLI) and that runs
+GSPMD data-parallel under a mesh.  Pipeline (mirrors paper Secs. 7-8 on
+synthetic data — no MGB in this container, see DESIGN.md):
   1. frame-level CE pretraining of the LSTM-HMM output model,
   2. MPE sequence training with NGHF (large gradient batch + CG batch,
      shared-parameter preconditioning, candidate selection),
@@ -13,79 +16,51 @@ container, see DESIGN.md):
 """
 import argparse
 
-import jax
-import numpy as np
-
 from repro.configs.acoustic import LSTM
-from repro.core.nghf import SecondOrderConfig, second_order_update
-from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
-                                   adam_update, sgd_init, sgd_update)
-from repro.data.synthetic import EpochPlan, asr_batch
-from repro.losses.sequence import CELoss, MPELoss
-from repro.models import acoustic
+from repro.launch.train import evaluate_sequence, train_sequence
 
 CFG = LSTM.smoke().replace(hidden_dim=48, num_outputs=30)
-LOSS = MPELoss(kappa=0.5)
+KAPPA = 0.5
+FRAMES = 32
+NOISE = 1.2
 
 
-def batch(seed, n=32):
-    return asr_batch(seed, batch=n, num_frames=32, num_states=30,
-                     input_dim=CFG.input_dim, noise=1.2)
-
-
-def fwd(p, b):
-    return acoustic.forward(CFG, p, b["feats"]), 0.0
-
-
-def evaluate(params, n=4):
-    accs = []
-    for i in range(n):
-        b = batch(90_000 + i)
-        accs.append(float(LOSS.value(fwd(params, b)[0], b)[1]["mpe_acc"]))
-    return float(np.mean(accs))
+def evaluate(params):
+    return evaluate_sequence(CFG, params, loss="mpe", kappa=KAPPA,
+                             frames=FRAMES, batch=32, n=4, noise=NOISE)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--updates", type=int, default=8)
+    ap.add_argument("--mesh", default=None,
+                    help="none (default) | single-pod | multi-pod")
     args = ap.parse_args()
 
     # --- 1. CE pretraining ---------------------------------------------------
-    params = acoustic.init_params(CFG, jax.random.PRNGKey(0))
-    opt = AdamConfig(lr=3e-3)
-    state = adam_init(params, opt)
-    ce_step = jax.jit(lambda p, s, b: adam_update(fwd, CELoss(), opt, p, b, s))
-    for i in range(60):
-        params, state, m = ce_step(params, state, batch(1000 + i, 16))
-    base = params
+    # seed=1000 keeps the CE stream disjoint from the MPE gradient seeds
+    base, _ = train_sequence(acfg=CFG, optimizer="adam", loss="ce", steps=60,
+                             batch=16, frames=FRAMES, lr=3e-3, noise=NOISE,
+                             mesh=args.mesh, seed=1000, verbose=False)
     print(f"CE baseline MPE-acc: {evaluate(base):.4f}")
 
     # --- 2. MPE with NGHF ------------------------------------------------------
-    counts = acoustic.share_counts(CFG, base)
-    plan = EpochPlan(num_updates_per_epoch=args.updates)
-    socfg = SecondOrderConfig(method="nghf", cg_iters=6, ng_iters=2, lam=1.0)
-    upd = jax.jit(lambda p, gb, cb: second_order_update(
-        fwd, LOSS, socfg, p, gb, cb, share_counts=counts))
-    params = base
-    for u in range(args.updates):
-        gb = batch(plan.grad_seed(0, u), 64)      # the big gradient batch
-        cb = batch(plan.cg_seed(0, u), 8)         # CG batch from whole set
-        params, m = upd(params, gb, cb)
-        print(f"  NGHF update {u}: mpe_acc={float(m['mpe_acc']):.4f} "
-              f"best_cg_iter={int(m['cg_best_iter'])} "
-              f"accepted={bool(m['cg_accepted'])}")
+    params, log = train_sequence(
+        acfg=CFG, optimizer="nghf", loss="mpe", steps=args.updates,
+        batch=64, cg_batch=8, frames=FRAMES, kappa=KAPPA, cg_iters=6,
+        ng_iters=2, noise=NOISE, mesh=args.mesh, init_params=base)
     nghf_acc = evaluate(params)
 
     # --- 3. SGD / Adam with 20x the updates -----------------------------------
     results = {"CE": evaluate(base), "NGHF": nghf_acc}
-    for name, cfgo, init, update in (
-            ("SGD", SGDConfig(lr=0.2), sgd_init, sgd_update),
-            ("Adam", AdamConfig(lr=2e-3), adam_init, adam_update)):
-        p, s = base, init(base, cfgo)
-        step = jax.jit(lambda p, s, b, c=cfgo, u=update: u(fwd, LOSS, c,
-                                                           p, b, s))
-        for i in range(args.updates * 20):
-            p, s, m = step(p, s, batch(i % 64, 16))
+    for name, lr in (("SGD", 0.2), ("Adam", 2e-3)):
+        # dataset_batches=64: the baselines revisit a fixed 64-batch
+        # training set (epoch regime), as in the paper's comparison
+        p, _ = train_sequence(
+            acfg=CFG, optimizer=name.lower(), loss="mpe", steps=args.updates * 20,
+            batch=16, frames=FRAMES, kappa=KAPPA, lr=lr, noise=NOISE,
+            mesh=args.mesh, init_params=base, dataset_batches=64,
+            verbose=False)
         results[name] = evaluate(p)
 
     # --- 4. summary (paper Table 2 shape) --------------------------------------

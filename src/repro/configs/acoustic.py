@@ -16,3 +16,23 @@ TDNN_RELU = AcousticConfig(name="tdnn-relu", kind="tdnn", activation="relu")
 ACOUSTIC_CONFIGS = {
     c.name: c for c in (RNN_SIGMOID, RNN_RELU, LSTM, TDNN_SIGMOID, TDNN_RELU)
 }
+
+# Driver-facing ids (launch/train.py --arch): the "-asr" suffix keeps the
+# acoustic namespace disjoint from the LLM archetype ids.
+ASR_ARCHS = {
+    "rnn-asr": "rnn-sigmoid",
+    "rnn-relu-asr": "rnn-relu",
+    "lstm-asr": "lstm",
+    "tdnn-asr": "tdnn-sigmoid",
+    "tdnn-relu-asr": "tdnn-relu",
+}
+
+
+def get_acoustic_config(arch: str) -> AcousticConfig:
+    """Resolve a driver id ("lstm-asr") or config name ("lstm")."""
+    name = ASR_ARCHS.get(arch, arch)
+    if name not in ACOUSTIC_CONFIGS:
+        raise ValueError(
+            f"unknown acoustic arch {arch!r}; expected one of "
+            f"{sorted(ASR_ARCHS) + sorted(ACOUSTIC_CONFIGS)}")
+    return ACOUSTIC_CONFIGS[name]

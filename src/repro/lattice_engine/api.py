@@ -59,7 +59,15 @@ def resolve_backend(backend: str, lat: Lattice) -> str:
 
 
 def lattice_stats(lat: Lattice, log_probs, kappa: float,
-                  backend: str = "auto") -> FBStats:
+                  backend: str = "auto", mesh=None) -> FBStats:
     """Differentiable lattice forward-backward statistics (one API over
-    the scan / levelized / Pallas backends)."""
-    return _DISPATCH[resolve_backend(backend, lat)](lat, log_probs, kappa)
+    the scan / levelized / Pallas backends).
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — the (B, A) arc tensors
+    (scores, alpha/beta/gamma, correctness accumulators) are then
+    ``with_sharding_constraint``-ed to its data axes so the statistics
+    stage stays GSPMD data-parallel under pjit (see
+    ``launch.sharding.lattice_shardings`` for the input side).
+    """
+    return _DISPATCH[resolve_backend(backend, lat)](lat, log_probs, kappa,
+                                                    mesh=mesh)

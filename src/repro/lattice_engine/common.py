@@ -39,15 +39,25 @@ def arc_scores(lat: Lattice, log_probs: jnp.ndarray, kappa: float):
     gathers only the 2A span endpoints ((t, label) pairs flattened to one
     axis) — O(T*K) streaming work + O(A) gathered elements, instead of
     materialising a (T, A) per-arc gather.
+
+    The cumsum is mean-centred per (b, k) stream: raw partial sums grow
+    like t·E[log p] (≈ -t·log K), so at large T the f32 endpoint
+    difference of a short span cancels catastrophically against the
+    cumulative magnitude.  Centred partial sums stay O(√T·σ); the removed
+    linear ramp is restored exactly from the span length.
     """
     B, T, K = log_probs.shape
-    cum = jnp.cumsum(log_probs, axis=1)
+    lp = log_probs.astype(jnp.float32)
+    mu = jnp.mean(lp, axis=1, keepdims=True)                  # (B, 1, K)
+    cum = jnp.cumsum(lp - mu, axis=1)
     cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
     flat = cum.reshape(B, (T + 1) * K)                        # (B,(T+1)K)
     lab = lat.label.astype(jnp.int32)
     hi = jnp.take_along_axis(flat, lat.end_t * K + lab, axis=1)
     lo = jnp.take_along_axis(flat, lat.start_t * K + lab, axis=1)
-    return kappa * (hi - lo)
+    span = (lat.end_t - lat.start_t).astype(jnp.float32)
+    mu_lab = jnp.take_along_axis(mu[:, 0, :], lab, axis=1)    # (B, A)
+    return kappa * (hi - lo + span * mu_lab)
 
 
 def gather_log(arr, idx):
@@ -62,20 +72,77 @@ def gather_lin(arr, idx, fill=0.0):
 
 
 def masked_logsumexp(x, axis=-1):
+    """logsumexp treating entries at/near ``NEG`` as masked.
+
+    An all-masked row returns exactly ``NEG`` with ZERO gradient: naively,
+    ``exp(x - max) = 1`` for every entry of such a row, so softmax-style
+    cotangents of 1/W would leak into padded arc scores (e.g. the summed
+    ``beta + own`` terms of arcs whose successor slots are all padding).
+    Masked entries are zeroed *before* the sum so no gradient flows.
+    """
+    valid = x > NEG * 0.5
+    any_valid = jnp.any(valid, axis=axis)
     m = jnp.max(x, axis=axis, keepdims=True)
-    m = jnp.maximum(m, NEG)
-    out = jnp.log(jnp.sum(jnp.exp(x - m), axis=axis)) + jnp.squeeze(m, axis)
-    return jnp.maximum(out, NEG)
+    m = jnp.where(m > NEG * 0.5, m, 0.0)       # safe pivot for masked rows
+    e = jnp.where(valid, jnp.exp(x - m), 0.0)
+    s = jnp.sum(e, axis=axis)
+    out = jnp.log(jnp.where(any_valid, s, 1.0)) + jnp.squeeze(m, axis)
+    return jnp.where(any_valid, jnp.maximum(out, NEG), NEG)
 
 
-def finalize(lat: Lattice, alpha, beta, c_alpha, c_beta) -> FBStats:
+def masked_softmax(x, axis=-1):
+    """Softmax companion of ``masked_logsumexp``: all-masked rows get
+    all-zero weights (not uniform 1/W), and masked entries carry no
+    gradient.  Used for the expected-correctness weighted means."""
+    valid = x > NEG * 0.5
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.where(m > NEG * 0.5, m, 0.0)
+    e = jnp.where(valid, jnp.exp(x - m), 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    # any valid row has s >= 1 (the max contributes exp(0)); masked rows
+    # divide 0 by 1.
+    return e / jnp.maximum(s, 1.0)
+
+
+def data_constrainer(mesh):
+    """``with_sharding_constraint`` factory for batch-leading tensors.
+
+    Returns ``f(x)`` constraining dim 0 of ``x`` over the mesh's data axes
+    (``pod``/``data``) and replicating the rest — the GSPMD annotation that
+    keeps the vmapped level scans data-parallel instead of silently
+    replicated.  Identity when ``mesh`` is None, when the mesh has no data
+    axes, or when the batch dim does not divide the data extent (matching
+    ``launch.sharding.batch_pspec`` divisibility semantics).
+    """
+    if mesh is None:
+        return lambda x: x
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch.sharding import data_extent   # shared axis policy
+    axes, size = data_extent(mesh)
+    if not axes:
+        return lambda x: x
+
+    def constrain(x):
+        if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] % size:
+            return x
+        spec = PartitionSpec(axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def finalize(lat: Lattice, alpha, beta, c_alpha, c_beta,
+             constrain=None) -> FBStats:
     """Reduce per-arc forward/backward scores to the full statistics set."""
+    c = constrain if constrain is not None else (lambda x: x)
+    alpha, beta = c(alpha), c(beta)
+    c_alpha, c_beta = c(c_alpha), c(c_beta)
     final_alpha = jnp.where(lat.is_final & lat.arc_mask, alpha, NEG)
     logZ = masked_logsumexp(final_alpha, axis=-1)               # (B,)
-    wf = jax.nn.softmax(final_alpha, axis=-1)
+    wf = masked_softmax(final_alpha, axis=-1)
     c_avg = jnp.sum(wf * c_alpha, axis=-1)
-    gamma = jnp.where(lat.arc_mask,
-                      jnp.exp(alpha + beta - logZ[:, None]), 0.0)
+    gamma = c(jnp.where(lat.arc_mask,
+                        jnp.exp(alpha + beta - logZ[:, None]), 0.0))
     return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,
                    c_alpha=c_alpha, c_beta=c_beta, c_avg=c_avg,
                    c_arc=c_alpha + c_beta)

@@ -26,8 +26,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.lattice_engine.common import (NEG, FBStats, arc_scores, finalize,
-                                         masked_logsumexp)
+from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
+                                         data_constrainer, finalize,
+                                         masked_logsumexp, masked_softmax)
 from repro.losses.lattice import Lattice
 
 
@@ -74,7 +75,7 @@ def _forward_levels(own, corr, preds, is_start, mask, level_arcs):
         pa = alpha[pidx_l]                                     # (W, P)
         pc = c_alpha[pidx_l]
         in_log = masked_logsumexp(pa, axis=-1)                 # (W,)
-        w = jax.nn.softmax(pa, axis=-1)
+        w = masked_softmax(pa, axis=-1)
         c_in = jnp.sum(w * pc, axis=-1)
         a_val = jnp.where(start_l, own_l, own_l + in_log)
         c_val = corr_l + jnp.where(start_l, 0.0, c_in)
@@ -118,7 +119,7 @@ def _backward_levels(own, corr, succs, is_final, mask, level_arcs):
                           NEG)                                 # (W, S)
         sc = c_beta[sidx_l] + corr_pad[sidx_l]
         out_log = masked_logsumexp(s_out, axis=-1)
-        w = jax.nn.softmax(s_out, axis=-1)
+        w = masked_softmax(s_out, axis=-1)
         c_out = jnp.sum(w * sc, axis=-1)
         b_val = jnp.where(final_l, 0.0, out_log)
         c_val = jnp.where(final_l, 0.0, c_out)
@@ -135,13 +136,14 @@ def _backward_levels(own, corr, succs, is_final, mask, level_arcs):
 
 
 def forward_backward_levelized(lat: Lattice, log_probs: jnp.ndarray,
-                               kappa: float) -> FBStats:
+                               kappa: float, mesh=None) -> FBStats:
     """Full lattice statistics via the level-parallel scan, vmapped over B."""
     if lat.level_arcs is None:
         raise ValueError(
             "levelized backend needs Lattice.level_arcs; build batches with "
             "repro.losses.lattice.batch_lattices (levelizes automatically)")
-    am = arc_scores(lat, log_probs, kappa) + lat.lm            # (B, A)
+    c = data_constrainer(mesh)
+    am = c(arc_scores(lat, log_probs, kappa) + lat.lm)         # (B, A)
 
     alpha, c_alpha = jax.vmap(_forward_levels)(
         am, lat.corr, lat.preds, lat.is_start, lat.arc_mask, lat.level_arcs)
@@ -152,4 +154,4 @@ def forward_backward_levelized(lat: Lattice, log_probs: jnp.ndarray,
     beta = jnp.where(lat.arc_mask, beta, NEG)
     c_alpha = jnp.where(lat.arc_mask, c_alpha, 0.0)
     c_beta = jnp.where(lat.arc_mask, c_beta, 0.0)
-    return finalize(lat, alpha, beta, c_alpha, c_beta)
+    return finalize(lat, alpha, beta, c_alpha, c_beta, constrain=c)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels.lattice_fb import sausage_backward, sausage_forward
 from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
-                                         lattice_is_sausage)
+                                         data_constrainer, lattice_is_sausage)
 from repro.losses.lattice import Lattice
 
 
@@ -89,7 +89,7 @@ def _sausage_logz_cavg_jvp(primals, tangents):
 
 
 def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
-                            kappa: float) -> FBStats:
+                            kappa: float, mesh=None) -> FBStats:
     """Full sausage-lattice statistics via the Pallas kernel pair.
 
     Only ``logZ`` and ``c_avg`` carry gradients (see module docstring);
@@ -108,8 +108,9 @@ def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
             "topology — every arc of level l connected to every arc of "
             "level l-1 and only last-level arcs final; use the "
             "'levelized' or 'scan' backend for general DAG lattices")
-    am = arc_scores(lat, log_probs, kappa) + lat.lm            # (B, A)
-    scores_sg = _to_sausage(lat, am, NEG)
+    c = data_constrainer(mesh)
+    am = c(arc_scores(lat, log_probs, kappa) + lat.lm)         # (B, A)
+    scores_sg = c(_to_sausage(lat, am, NEG))
     corr_sg = _to_sausage(lat, lat.corr, 0.0)
     mask_sg = _sausage_mask(lat)
 
@@ -122,11 +123,11 @@ def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
     gamma_sg = jnp.where(mask_sg > 0.5,
                          jnp.exp(alpha_sg + beta_sg - logz_c[:, None, None]),
                          0.0)
-    alpha = _from_sausage(lat, alpha_sg, NEG)
-    beta = _from_sausage(lat, beta_sg, NEG)
-    c_alpha = _from_sausage(lat, c_alpha_sg, 0.0)
-    c_beta = _from_sausage(lat, c_beta_sg, 0.0)
-    gamma = _from_sausage(lat, gamma_sg, 0.0)
+    alpha = c(_from_sausage(lat, alpha_sg, NEG))
+    beta = c(_from_sausage(lat, beta_sg, NEG))
+    c_alpha = c(_from_sausage(lat, c_alpha_sg, 0.0))
+    c_beta = c(_from_sausage(lat, c_beta_sg, 0.0))
+    gamma = c(_from_sausage(lat, gamma_sg, 0.0))
     return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,
                    c_alpha=c_alpha, c_beta=c_beta, c_avg=c_avg,
                    c_arc=c_alpha + c_beta)

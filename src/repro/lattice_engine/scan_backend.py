@@ -11,9 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.lattice_engine.common import (NEG, FBStats, arc_scores, finalize,
+from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
+                                         data_constrainer, finalize,
                                          gather_lin, gather_log,
-                                         masked_logsumexp)
+                                         masked_logsumexp, masked_softmax)
 from repro.losses.lattice import Lattice
 
 
@@ -27,7 +28,7 @@ def _forward_single(lat_score, lm, corr, preds, is_start, mask):
         pa = gather_log(alpha, preds[a])
         pc = gather_lin(c_alpha, preds[a])
         in_log = masked_logsumexp(pa)
-        w = jax.nn.softmax(jnp.where(preds[a] >= 0, pa, NEG))
+        w = masked_softmax(pa)
         c_in = jnp.sum(w * pc)
         a_val = jnp.where(is_start[a], own[a], own[a] + in_log)
         c_val = corr[a] + jnp.where(is_start[a], 0.0, c_in)
@@ -51,7 +52,7 @@ def _backward_single(lat_score, lm, corr, succs, is_final, mask):
         s_out = gather_log(beta, succs[a]) + gather_lin(own, succs[a], NEG)
         sc = gather_lin(c_beta, succs[a]) + gather_lin(corr, succs[a])
         out_log = masked_logsumexp(s_out)
-        w = jax.nn.softmax(jnp.where(succs[a] >= 0, s_out, NEG))
+        w = masked_softmax(s_out)
         c_out = jnp.sum(w * sc)
         b_val = jnp.where(is_final[a], 0.0, out_log)
         c_val = jnp.where(is_final[a], 0.0, c_out)
@@ -67,12 +68,13 @@ def _backward_single(lat_score, lm, corr, succs, is_final, mask):
 
 
 def forward_backward_scan(lat: Lattice, log_probs: jnp.ndarray,
-                          kappa: float) -> FBStats:
+                          kappa: float, mesh=None) -> FBStats:
     """Full lattice statistics via the per-arc scan, vmapped over B."""
-    am = arc_scores(lat, log_probs, kappa)                    # (B, A)
+    c = data_constrainer(mesh)
+    am = c(arc_scores(lat, log_probs, kappa))                 # (B, A)
 
     alpha, c_alpha = jax.vmap(_forward_single)(
         am, lat.lm, lat.corr, lat.preds, lat.is_start, lat.arc_mask)
     beta, c_beta = jax.vmap(_backward_single)(
         am, lat.lm, lat.corr, lat.succs, lat.is_final, lat.arc_mask)
-    return finalize(lat, alpha, beta, c_alpha, c_beta)
+    return finalize(lat, alpha, beta, c_alpha, c_beta, constrain=c)

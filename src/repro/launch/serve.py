@@ -42,6 +42,8 @@ def serve(cfg, model, params, requests, *, cache_len=256, greedy=True,
     per-slot position; kept single-position for cache simplicity and noted
     as a serving-layer simplification).
     """
+    if not requests:
+        return requests, {"tokens_per_s": 0.0, "wall_s": 0.0, "steps": 0}
     B = len(requests)
     cache = model.init_cache(B, cache_len, long_mode=long_mode)
     step = jax.jit(
@@ -55,16 +57,23 @@ def serve(cfg, model, params, requests, *, cache_len=256, greedy=True,
     n_tok = 0
     for pos in range(max_steps):
         feed = []
+        n_live = 0
         for r in requests:
             if pos < len(r.prompt):
                 feed.append(r.prompt[pos])
+                n_live += 1
             elif r.generated and not r.done:
                 feed.append(r.generated[-1])
+                n_live += 1
             else:
-                feed.append(0)
+                feed.append(0)            # idle/finished slot: pad token
         tokens = jnp.asarray(feed, jnp.int32)[:, None]
         logits, cache = step(params, cache, tokens, jnp.int32(pos))
-        n_tok += B
+        # only slots doing real work count toward throughput — finished
+        # and idle slots still occupy the batch but process no request
+        # tokens, so counting B every step inflates tokens_per_s once
+        # requests complete at different times
+        n_tok += n_live
         if greedy:
             nxt = jnp.argmax(logits[:, 0], -1)
         else:

@@ -167,9 +167,55 @@ def data_axes(mesh: Mesh):
     return axes if axes else None
 
 
+def data_extent(mesh: Mesh):
+    """(axes, total size) of the data-parallel mesh axes — THE single
+    definition of which axes carry the batch (also consumed by
+    ``lattice_engine.common.data_constrainer`` so the engine's internal
+    constraints can never diverge from the input placement rules)."""
+    axes = data_axes(mesh)
+    size = 1
+    for a in (axes or ()):
+        size *= mesh.shape[a]
+    return axes, size
+
+
 def batch_pspec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
     dp = data_axes(mesh)
     return P(dp if batch_divisible else None, *([None] * (ndim - 1)))
+
+
+def lattice_pspec(mesh, shape) -> P:
+    """PartitionSpec for one ``Lattice`` leaf (or any batch-leading ASR
+    tensor): leading batch dim over the (pod, data) axes, everything else
+    replicated.  Divisibility is all-or-nothing, matching ``batch_pspec``:
+    if B does not divide the full data-parallel extent the leaf is
+    replicated (no partial-axis fallback — a half-sharded lattice would
+    desynchronise the frontier gathers from the arc tensors)."""
+    dp, size = data_extent(mesh)
+    if dp is None or not shape:
+        return P(*([None] * len(shape)))
+    lead = dp if shape[0] % size == 0 else None
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def sequence_input_shardings(mesh: Mesh, batch):
+    """Shardings for an ASR sequence batch ({feats, labels, lattice, ...})
+    or a bare ``Lattice`` pytree: every array leaf — the dense (B, T, D)
+    features and every (B, A) / (B, A, P) / (B, L, W) / (B, T) / (B,)
+    lattice field — is batch-sharded over (pod, data) with the same
+    divisibility guard, so the gradient and statistics stages shard
+    together.  ``level_arcs=None`` (unlevelized) passes through tree_map."""
+
+    def per_leaf(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, lattice_pspec(mesh, leaf.shape))
+
+    return jax.tree.map(per_leaf, batch)
+
+
+# a Lattice IS a valid batch subtree; keep the issue-facing name
+lattice_shardings = sequence_input_shardings
 
 
 def input_shardings(cfg: ArchConfig, mesh: Mesh, specs):

@@ -6,6 +6,13 @@ multi-pod dry-run lower.
     selection on a CG sub-batch), as a single jitted function.  Under pjit
     the batch means become all-reduces over (pod, data) — the paper's
     Fig. 1 distributed scheme.
+  * ``build_sequence_step`` — the same two-stage update for the paper's
+    actual workload: an acoustic model + lattice MMI/MPE ``LossSpec``.
+    Takes an explicit CG batch (the paper samples it from the WHOLE
+    training set, not the gradient batch — Sec. 4.1) and, under a mesh,
+    threads state sharding + the lattice-engine constraints so the
+    statistics stage (``lattice_stats``) is GSPMD data-parallel alongside
+    the gradient stage.
   * ``build_sgd_step`` / ``build_adam_step`` — first-order baselines.
   * ``build_prefill_step`` — sequence forward returning last-position
     logits only (never materialises (B, T, V)).
@@ -54,7 +61,8 @@ def _scalar_metrics(metrics: dict) -> dict:
 def cg_sub_batch(batch: dict, frac: int, min_size: int):
     """Static slice of the leading batch dim — the paper's (much smaller)
     CG batch.  Keeps divisibility by the data-parallel extent."""
-    B = batch["tokens"].shape[0]
+    ref = batch["tokens"] if "tokens" in batch else batch["feats"]
+    B = ref.shape[0]
     nb = max(B // frac, min_size)
 
     def slc(x):
@@ -83,6 +91,48 @@ def build_train_step(cfg: ArchConfig, socfg: SecondOrderConfig,
         return new_params, _scalar_metrics(metrics)
 
     return train_step
+
+
+def acoustic_forward_fn(acfg):
+    """forward for the acoustic models: (params, batch) -> (logits, 0 aux)."""
+    from repro.models import acoustic
+
+    def fwd(params, batch):
+        return acoustic.forward(acfg, params, batch["feats"]), 0.0
+
+    return fwd
+
+
+def build_sequence_step(acfg, socfg: SecondOrderConfig, *,
+                        loss: str = "mpe", kappa: float = 0.5,
+                        backend: str = "auto", mesh=None,
+                        state_sharding=None, share_counts=None) -> Callable:
+    """One full NGHF/NG/HF update for lattice-based sequence training.
+
+    Returns ``step(params, grad_batch, cg_batch) -> (params, metrics)``
+    where both batches come from ``data.synthetic.asr_batch`` (feats +
+    labels + a ``Lattice``).  The CG batch is explicit because the paper
+    samples it from the entire training set (Sec. 4.1), not as a slice of
+    the gradient batch.
+
+    Under ``mesh`` the lattice ``LossSpec`` constrains the engine's (B, A)
+    arc tensors to the data axes (``lattice_stats(..., mesh=...)``) and
+    ``state_sharding`` pins the θ-sized CG state, so jitting this function
+    with ``launch.sharding.sequence_input_shardings``-placed batches runs
+    both Fig. 1 stages GSPMD data-parallel.
+    """
+    from repro.losses.sequence import get_loss
+
+    loss_spec = get_loss(loss, kappa=kappa, backend=backend, mesh=mesh)
+    fwd = acoustic_forward_fn(acfg)
+
+    def sequence_step(params, grad_batch, cg_batch):
+        new_params, metrics = second_order_update(
+            fwd, loss_spec, socfg, params, grad_batch, cg_batch,
+            share_counts=share_counts, state_sharding=state_sharding)
+        return new_params, _scalar_metrics(metrics)
+
+    return sequence_step
 
 
 def build_sgd_step(cfg: ArchConfig, opt: SGDConfig):

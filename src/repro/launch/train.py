@@ -1,14 +1,18 @@
 """Training driver.
 
 Runs NGHF / NG / HF / SGD / Adam on any registered architecture with the
-synthetic LM pipeline.  On CPU use ``--smoke`` (reduced geometry); on a real
-cluster the same script runs against the production mesh (``--mesh``).
+synthetic LM pipeline — or, with an ``--arch *-asr`` id, runs the paper's
+actual workload: lattice-based discriminative sequence training (MPE/MMI)
+of an acoustic model, through the SAME distributed launch layer (mesh +
+sharded batches + jitted ``second_order_update``).  On CPU use ``--smoke``
+(reduced geometry); on a real cluster the same script runs against the
+production mesh (``--mesh``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
       --optimizer nghf --steps 20 --batch 8 --seq 128
-  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
-      --optimizer adam --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch lstm-asr --smoke \
+      --optimizer nghf --loss mpe --steps 8 --batch 32
 """
 from __future__ import annotations
 
@@ -21,20 +25,164 @@ import jax
 import numpy as np
 
 from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.configs.acoustic import ASR_ARCHS, get_acoustic_config
 from repro.configs.base import get_config, list_archs
 from repro.core.nghf import SecondOrderConfig
-from repro.core.optimizers import AdamConfig, SGDConfig
+from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
+                                   adam_update, sgd_init, sgd_update)
 from repro.data.pipeline import shard_batch
-from repro.data.synthetic import lm_batch
+from repro.data.synthetic import EpochPlan, asr_batch, lm_batch
 from repro.launch import steps as S
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.launch.sharding import input_shardings, param_shardings
+from repro.launch.sharding import (input_shardings, param_shardings,
+                                   sequence_input_shardings)
 from repro.models.registry import get_model
+
+
+# ---------------------------------------------------------------------------
+# Lattice sequence training (the paper's workload) through the launch layer
+# ---------------------------------------------------------------------------
+
+def _resolve_mesh(mesh):
+    if mesh is None or mesh == "none":
+        return None
+    if isinstance(mesh, str):
+        return make_production_mesh(multi_pod=mesh == "multi-pod")
+    return mesh                        # an actual jax.sharding.Mesh
+
+
+def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
+                   steps=8, batch=32, cg_batch=8, frames=32, kappa=0.5,
+                   cg_iters=6, ng_iters=2, lam=1.0, lr=None, noise=1.2,
+                   smoke=False, mesh=None, backend="auto", init_params=None,
+                   seed=0, verbose=True, ckpt_dir=None, resume=False,
+                   dataset_batches=None):
+    """Lattice MPE/MMI (or frame-CE) training of an acoustic model through
+    the distributed launch layer.  Returns ``(params, log)``.
+
+    ``mesh``: None, a ``jax.sharding.Mesh``, or "single-pod"/"multi-pod".
+    Under a mesh the acoustic params are replicated (they are small; the
+    batch is what scales), every batch — dense features AND the packed
+    ``Lattice`` pytree — is placed with ``sequence_input_shardings``, and
+    the jitted update runs both Fig. 1 stages GSPMD data-parallel.
+
+    ``dataset_batches``: when set, gradient batches cycle over a FIXED
+    pool of that many seeds (a finite training set revisited across
+    epochs, the paper's regime); when None every update draws a fresh
+    batch.  ``seed`` offsets the whole stream so separate stages (e.g. CE
+    pretraining vs MPE) can use disjoint data.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import acoustic
+
+    if acfg is None:
+        acfg = get_acoustic_config(arch)
+        if smoke:
+            acfg = acfg.smoke()
+    mesh = _resolve_mesh(mesh)
+
+    params = init_params if init_params is not None else \
+        acoustic.init_params(acfg, jax.random.PRNGKey(seed))
+    state_sharding = None
+    if mesh is not None:
+        state_sharding = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), params)
+        params = jax.device_put(params, state_sharding)
+
+    def make_batch(s, n):
+        b = asr_batch(s, batch=n, num_frames=frames,
+                      num_states=acfg.num_outputs, input_dim=acfg.input_dim,
+                      noise=noise)
+        if mesh is not None:
+            b = jax.device_put(b, sequence_input_shardings(mesh, b))
+        return b
+
+    second_order = optimizer in ("nghf", "ng", "hf")
+    if second_order:
+        socfg = SecondOrderConfig(method=optimizer, cg_iters=cg_iters,
+                                  ng_iters=ng_iters, lam=lam)
+        counts = acoustic.share_counts(acfg, params)
+        step = jax.jit(S.build_sequence_step(
+            acfg, socfg, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
+            state_sharding=state_sharding, share_counts=counts))
+        opt_state = None
+    else:
+        from repro.losses.sequence import get_loss
+        loss_spec = get_loss(loss, kappa=kappa, backend=backend, mesh=mesh)
+        fwd = S.acoustic_forward_fn(acfg)
+        if optimizer == "sgd":
+            ocfg = SGDConfig(lr=lr if lr is not None else 0.2)
+            opt_state = sgd_init(params, ocfg)
+            upd = sgd_update
+        elif optimizer == "adam":
+            ocfg = AdamConfig(lr=lr if lr is not None else 2e-3)
+            opt_state = adam_init(params, ocfg)
+            upd = adam_update
+        else:
+            raise ValueError(optimizer)
+        step = jax.jit(lambda p, s, b: upd(fwd, loss_spec, ocfg, p, b, s))
+
+    start = 0
+    if resume and ckpt_dir and os.path.exists(ckpt_dir):
+        params, start = load_checkpoint(ckpt_dir, params)
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    plan = EpochPlan(num_updates_per_epoch=max(steps, 1), base_seed=seed)
+
+    def grad_seed(u):
+        return plan.grad_seed(0, u % dataset_batches if dataset_batches
+                              else u)
+
+    log = []
+    for u in range(start, steps):
+        t0 = time.time()
+        if second_order:
+            gb = make_batch(grad_seed(u), batch)
+            cb = make_batch(plan.cg_seed(0, u), cg_batch)
+            params, metrics = step(params, gb, cb)
+        else:
+            params, opt_state, metrics = step(params, opt_state,
+                                              make_batch(grad_seed(u),
+                                                         batch))
+        metrics = {k: float(v) for k, v in metrics.items()
+                   if getattr(v, "ndim", 0) == 0}
+        dt = time.time() - t0
+        log.append(dict(step=u, time_s=dt, **metrics))
+        if verbose:
+            key_metric = metrics.get("mpe_acc", metrics.get(
+                "mmi", metrics.get("ce", metrics.get("loss", float("nan")))))
+            print(f"  seq step {u:4d} {loss}={key_metric:.4f} ({dt:.1f}s)")
+        if ckpt_dir and (u + 1) % 10 == 0:
+            save_checkpoint(ckpt_dir, params, step=u + 1)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, params, step=steps)
+    return params, log
+
+
+def evaluate_sequence(acfg, params, *, loss="mpe", kappa=0.5, frames=32,
+                      batch=32, n=4, noise=1.2, seed0=90_000,
+                      backend="auto"):
+    """Held-out metric (mpe_acc for MPE, -loss otherwise) over n batches."""
+    from repro.losses.sequence import get_loss
+    from repro.models import acoustic
+
+    loss_spec = get_loss(loss, kappa=kappa, backend=backend)
+    vals = []
+    for i in range(n):
+        b = asr_batch(seed0 + i, batch=batch, num_frames=frames,
+                      num_states=acfg.num_outputs, input_dim=acfg.input_dim,
+                      noise=noise)
+        logits = acoustic.forward(acfg, params, b["feats"])
+        val, metrics = loss_spec.value(logits, b)
+        vals.append(float(metrics.get("mpe_acc", -val)))
+    return float(np.mean(vals))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-3b", choices=list_archs())
+    ap.add_argument("--arch", default="qwen2.5-3b",
+                    choices=list_archs() + sorted(ASR_ARCHS))
     ap.add_argument("--optimizer", default="nghf",
                     choices=["nghf", "ng", "hf", "sgd", "adam"])
     ap.add_argument("--steps", type=int, default=10)
@@ -50,7 +198,26 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-json", default=None)
+    # lattice sequence training (``*-asr`` archs) only:
+    ap.add_argument("--loss", default="mpe", choices=["mpe", "mmi", "ce"])
+    ap.add_argument("--kappa", type=float, default=0.5)
+    ap.add_argument("--frames", type=int, default=32)
+    ap.add_argument("--cg-batch", type=int, default=8)
+    ap.add_argument("--lattice-backend", default="auto")
     args = ap.parse_args(argv)
+
+    if args.arch in ASR_ARCHS:
+        _, log = train_sequence(
+            arch=args.arch, optimizer=args.optimizer, loss=args.loss,
+            steps=args.steps, batch=args.batch, cg_batch=args.cg_batch,
+            frames=args.frames, kappa=args.kappa, cg_iters=args.cg_iters,
+            ng_iters=args.ng_iters, lr=args.lr, smoke=args.smoke,
+            mesh=args.mesh, backend=args.lattice_backend,
+            ckpt_dir=args.ckpt_dir, resume=args.resume)
+        if args.log_json:
+            with open(args.log_json, "w") as f:
+                json.dump(log, f, indent=1)
+        return log
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -62,9 +229,8 @@ def main(argv=None):
     print(f"[train] arch={cfg.name} params={model.param_count()/1e6:.1f}M "
           f"optimizer={args.optimizer}")
 
-    mesh = None
-    if args.mesh != "none":
-        mesh = make_production_mesh(multi_pod=args.mesh == "multi-pod")
+    mesh = _resolve_mesh(args.mesh)
+    if mesh is not None:
         pshard = param_shardings(cfg, mesh, model.param_shapes())
         params = jax.tree.map(jax.device_put, params, pshard)
 

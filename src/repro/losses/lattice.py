@@ -155,6 +155,84 @@ def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
     return out
 
 
+def make_random_dag_lattice(rng: np.random.Generator, *, num_frames: int,
+                            num_states: int, skip_prob: float = 0.4,
+                            max_alt: int = 3,
+                            max_arcs: int | None = None) -> dict:
+    """Generate one random general-DAG lattice as numpy arrays (unbatched).
+
+    Unlike the sausage generator this produces variable fan-in/out and
+    *skip arcs*: nodes sit at random frame boundaries; consecutive nodes
+    are always connected (so every arc lies on a start->final path — no
+    dead ends) and longer-range arcs over 2-3 boundaries are added with
+    ``skip_prob``, each boundary pair carrying 1..max_alt parallel arcs
+    with distinct labels.  Exercises the level machinery on topologies the
+    Pallas sausage contract rejects (``lattice_is_sausage`` is False).
+    """
+    # node times: 0 = t_0 < ... < t_{N-1} = num_frames
+    n_inner = int(rng.integers(2, max(3, num_frames // 4)))
+    inner = rng.choice(np.arange(1, num_frames), size=min(n_inner,
+                                                          num_frames - 1),
+                       replace=False)
+    times = np.array(sorted({0, num_frames} | set(int(t) for t in inner)))
+    N = len(times)
+    ref = rng.integers(0, num_states, size=num_frames).astype(np.int32)
+
+    raw = []                            # (start_node, end_node, label)
+    for i in range(N - 1):
+        targets = [i + 1]               # connectivity: consecutive nodes
+        for j in range(i + 2, min(i + 4, N)):
+            if rng.random() < skip_prob:
+                targets.append(j)       # skip arc over 1-2 boundaries
+        for j in targets:
+            for lab in rng.choice(num_states, size=int(rng.integers(
+                    1, max_alt + 1)), replace=False):
+                raw.append((i, j, int(lab)))
+    raw.sort()                          # (start, end) order => topological
+    A = len(raw)
+
+    start_t = np.array([times[i] for i, _, _ in raw], np.int32)
+    end_t = np.array([times[j] for _, j, _ in raw], np.int32)
+    label = np.array([l for _, _, l in raw], np.int32)
+    lm = rng.normal(0.0, 0.3, size=A).astype(np.float32)
+    corr = np.array([float(np.sum(ref[s:e] == l)) / max(e - s, 1)
+                     for (s, e, l) in zip(start_t, end_t, label)],
+                    np.float32)
+    by_end = {}                         # node -> arc ids ending there
+    by_start = {}                       # node -> arc ids starting there
+    for a, (i, j, _) in enumerate(raw):
+        by_end.setdefault(j, []).append(a)
+        by_start.setdefault(i, []).append(a)
+    P = max(max((len(v) for v in by_end.values()), default=1),
+            max((len(v) for v in by_start.values()), default=1))
+    preds = -np.ones((A, P), np.int32)
+    succs = -np.ones((A, P), np.int32)
+    for a, (i, j, _) in enumerate(raw):
+        for k, p in enumerate(by_end.get(i, [])):
+            preds[a, k] = p
+        for k, s in enumerate(by_start.get(j, [])):
+            succs[a, k] = s
+    is_start = np.array([i == 0 for i, _, _ in raw])
+    is_final = np.array([j == N - 1 for _, j, _ in raw])
+
+    out = dict(start_t=start_t, end_t=end_t, label=label, lm=lm, corr=corr,
+               preds=preds, succs=succs, is_start=is_start, is_final=is_final,
+               arc_mask=np.ones(A, bool), ref_states=ref,
+               num_ref_units=np.float32(N - 1))
+    if max_arcs is not None:
+        if max_arcs < A:
+            raise ValueError(f"max_arcs={max_arcs} < generated arcs {A}")
+        pad = max_arcs - A
+        for k in ("start_t", "end_t", "label", "lm", "corr",
+                  "is_start", "is_final", "arc_mask"):
+            out[k] = np.pad(out[k], (0, pad))
+        for k in ("preds", "succs"):
+            out[k] = np.pad(out[k], ((0, pad), (0, 0)), constant_values=-1)
+    out["level_arcs"] = levelize_arcs(out["preds"], out["is_start"],
+                                      out["arc_mask"])
+    return out
+
+
 def batch_lattices(lats: list[dict]) -> Lattice:
     lats = [dict(l) for l in lats]
     for l in lats:

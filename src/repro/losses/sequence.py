@@ -95,19 +95,23 @@ class MMILoss:
     alignment (its LM score is a constant w.r.t. θ and is dropped).
 
     ``backend`` selects the lattice-engine statistics backend ("auto"
-    dispatches: Pallas sausage kernels on TPU, levelized scan elsewhere)."""
+    dispatches: Pallas sausage kernels on TPU, levelized scan elsewhere).
+    ``mesh`` (optional jax.sharding.Mesh) keeps the engine's (B, A) arc
+    tensors constrained to the data axes under pjit."""
 
     name = "mmi"
 
-    def __init__(self, kappa: float = 1.0, backend: str = "auto"):
+    def __init__(self, kappa: float = 1.0, backend: str = "auto", mesh=None):
         self.kappa = kappa
         self.backend = backend
+        self.mesh = mesh
 
     def _parts(self, logits, lat: Lattice):
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
         num = self.kappa * jnp.take_along_axis(
             lp, lat.ref_states[..., None], -1)[..., 0].sum(-1)      # (B,)
-        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend)
+        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend,
+                              mesh=self.mesh)
         return num, stats
 
     def value(self, logits, batch):
@@ -153,15 +157,17 @@ class MPELoss:
 
     name = "mpe"
 
-    def __init__(self, kappa: float = 1.0, backend: str = "auto"):
+    def __init__(self, kappa: float = 1.0, backend: str = "auto", mesh=None):
         self.kappa = kappa
         self.backend = backend
-        self._mmi = MMILoss(kappa, backend=backend)
+        self.mesh = mesh
+        self._mmi = MMILoss(kappa, backend=backend, mesh=mesh)
 
     def value(self, logits, batch):
         lat: Lattice = batch["lattice"]
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend)
+        stats = lattice_stats(lat, lp, self.kappa, backend=self.backend,
+                              mesh=self.mesh)
         acc = stats.c_avg / jnp.maximum(lat.num_ref_units, 1.0)
         loss = -jnp.mean(acc)
         return loss, {"mpe_acc": jnp.mean(acc), "logZ": stats.logZ.mean()}
@@ -187,11 +193,12 @@ class MPELoss:
         return self._mmi.fisher_vp(logits, batch, u)
 
 
-def get_loss(name: str, kappa: float = 1.0, backend: str = "auto"):
+def get_loss(name: str, kappa: float = 1.0, backend: str = "auto",
+             mesh=None):
     if name == "ce":
         return CELoss()
     if name == "mmi":
-        return MMILoss(kappa, backend=backend)
+        return MMILoss(kappa, backend=backend, mesh=mesh)
     if name == "mpe":
-        return MPELoss(kappa, backend=backend)
+        return MPELoss(kappa, backend=backend, mesh=mesh)
     raise ValueError(name)

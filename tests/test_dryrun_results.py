@@ -13,6 +13,8 @@ import pytest
 
 from repro.configs.base import INPUT_SHAPES, get_config, list_archs
 
+pytestmark = pytest.mark.slow
+
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 

@@ -13,8 +13,10 @@ import pytest
 from repro.kernels import ops, ref
 from repro.lattice_engine import (BACKENDS, lattice_is_sausage,
                                   lattice_stats, resolve_backend)
+from repro.lattice_engine.common import arc_scores
 from repro.losses.forward_backward import forward_backward
 from repro.losses.lattice import (batch_lattices, make_lattice_batch,
+                                  make_random_dag_lattice,
                                   make_sausage_lattice)
 from repro.losses.sequence import MMILoss, MPELoss
 
@@ -157,6 +159,74 @@ def test_non_sausage_rejected_for_pallas_auto():
     d["preds"][2, 1] = -1          # arc 2 no longer sees every level-0 arc
     lat = batch_lattices([d])
     assert not lattice_is_sausage(lat)
+
+
+def test_arc_scores_long_T_regression():
+    """Endpoint-difference arc scoring must stay accurate at T >= 1024:
+    the raw f32 cumsum loses ~4e-4 absolute by T=1024 (span sums cancel
+    against cumulative magnitudes growing like T·log K); the mean-centred
+    cumsum stays within a few f32 ulps of the direct per-arc f64 sum."""
+    T, states = 1024, 16
+    lat = make_lattice_batch(0, batch=2, num_frames=T, num_states=states,
+                             seg_len=4, n_alt=3)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (2, T, states)), -1)
+    got = np.asarray(arc_scores(lat, lp, kappa=1.0))
+    lp64 = np.asarray(lp, np.float64)
+    start = np.asarray(lat.start_t)
+    end = np.asarray(lat.end_t)
+    lab = np.asarray(lat.label)
+    for b in range(2):
+        ref_b = np.array([lp64[b, s:e, l].sum()
+                          for s, e, l in zip(start[b], end[b], lab[b])])
+        np.testing.assert_allclose(got[b], ref_b, atol=5e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_padded_arcs_get_zero_cotangent(backend):
+    """Gradients through logZ/c_avg on a padded ragged batch must put
+    EXACTLY zero cotangent on padded arc scores — naive exp(x - max) over
+    an all-masked row leaks softmax-style 1/W gradients into padding."""
+    lat, lp = _padded_batch(0)
+    pad = ~np.asarray(lat.arc_mask)
+    assert pad.any()                                 # batch really is ragged
+
+    def f(lm):
+        st = lattice_stats(lat._replace(lm=lm), lp, 1.0, backend=backend)
+        return jnp.sum(st.logZ) + jnp.sum(st.c_avg)
+
+    g = np.asarray(jax.grad(f)(lat.lm))
+    assert np.isfinite(g).all()
+    assert np.abs(g[pad]).max() == 0.0
+    assert np.abs(g[~pad]).max() > 0.0               # real arcs still flow
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_dag_scan_levelized_agree(seed):
+    """The levelized backend's generality claim: agreement with the
+    per-arc reference on NON-sausage DAGs (variable fan-in/out, skip
+    arcs), both uniform and ragged/padded batches."""
+    rng = np.random.default_rng(seed)
+    T = 24
+    lats = [make_random_dag_lattice(rng, num_frames=T, num_states=K,
+                                    max_arcs=80) for _ in range(3)]
+    lat = batch_lattices(lats)
+    assert not lattice_is_sausage(lat)
+    lp = jax.nn.log_softmax(
+        jax.random.normal(jax.random.PRNGKey(seed + 300), (3, T, K)), -1)
+    want = lattice_stats(lat, lp, kappa=0.8, backend="scan")
+    got = lattice_stats(lat, lp, kappa=0.8, backend="levelized")
+    for field in ARC_FIELDS + UTT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
+            atol=1e-4, err_msg=f"levelized.{field} (seed={seed})")
+    # gradients agree too (the engine is differentiated in training)
+    g_scan = jax.grad(lambda l: jnp.sum(lattice_stats(
+        lat, l, 0.8, backend="scan").logZ))(lp)
+    g_lev = jax.grad(lambda l: jnp.sum(lattice_stats(
+        lat, l, 0.8, backend="levelized").logZ))(lp)
+    np.testing.assert_allclose(np.asarray(g_lev), np.asarray(g_scan),
+                               atol=1e-5)
 
 
 def test_forward_backward_shim_matches_engine():

@@ -43,6 +43,9 @@ def test_smoke_forward(arch, key):
     assert not bool(jnp.isnan(logits).any())
 
 
+# jits one FULL second-order train step per arch (~0.5-5 min each on CPU)
+# — the dominant cost of the suite, so it rides in the slow/full lane
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch, key):
     cfg = get_config(arch).smoke()
@@ -87,6 +90,7 @@ def test_smoke_decode_matches_forward(arch, key):
     assert rel < 2e-2, rel
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if get_config(a).supports_long_context])
 def test_smoke_long_context_ring_cache(arch, key):

@@ -1,5 +1,12 @@
 """Sharding rule + dry-run plumbing tests (no forced device count — these
-verify specs structurally, not on 512 devices)."""
+verify specs structurally, not on 512 devices; the one exception is the
+multi-device sequence-step equivalence test, which runs in a subprocess
+with XLA_FLAGS=--xla_force_host_platform_device_count=8)."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +14,10 @@ import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, get_config, list_archs
-from repro.launch.sharding import input_shardings, param_pspec, param_shardings
+from repro.launch.sharding import (input_shardings, lattice_pspec,
+                                   lattice_shardings, param_pspec,
+                                   param_shardings,
+                                   sequence_input_shardings)
 from repro.models.registry import get_model
 
 
@@ -15,6 +25,12 @@ class FakeMesh:
     """Structural stand-in with the production extents (16 x 16)."""
     axis_names = ("data", "model")
     shape = {"data": 16, "model": 16}
+
+
+class FakePodMesh:
+    """Structural stand-in for the multi-pod mesh (2 x 16 x 16)."""
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
 
 
 MESH = FakeMesh()
@@ -105,6 +121,115 @@ def test_param_shardings_tree_matches(key):
                 ("data", "model"))
     shard = param_shardings(cfg, mesh, shapes)
     assert jax.tree.structure(shard) == jax.tree.structure(shapes)
+
+
+# ---------------------------------------------------------------------------
+# Lattice / sequence-training sharding
+# ---------------------------------------------------------------------------
+
+def test_lattice_pspec_leading_dim_over_data_axes():
+    """(B, A) / (B, A, P) / (B, L, W) lattice fields shard their leading
+    batch dim over every data axis; trailing dims always replicate."""
+    assert lattice_pspec(MESH, (32, 48)) == P(("data",), None)
+    assert lattice_pspec(MESH, (32, 48, 3)) == P(("data",), None, None)
+    assert lattice_pspec(MESH, (32, 16, 3)) == P(("data",), None, None)
+    # multi-pod: batch over pod x data (the paper's master/worker split)
+    pm = FakePodMesh()
+    assert lattice_pspec(pm, (64, 48)) == P(("pod", "data"), None)
+
+
+def test_lattice_pspec_divisibility_guard_matches_batch_pspec():
+    """All-or-nothing guard: B that does not divide the FULL data extent
+    replicates (no partial-axis fallback)."""
+    assert lattice_pspec(MESH, (8, 48)) == P(None, None)        # 8 % 16 != 0
+    pm = FakePodMesh()
+    # 16 divides pod (2) and data (16) separately but not pod*data (32):
+    # the lattice rule must NOT fall back to a partial axis
+    assert lattice_pspec(pm, (16, 48)) == P(None, None)
+    assert lattice_pspec(pm, (32, 48)) == P(("pod", "data"), None)
+    assert lattice_pspec(pm, (64, 48)) == P(("pod", "data"), None)
+
+
+def test_lattice_shardings_cover_every_field(key):
+    from repro.losses.lattice import make_lattice_batch
+    lat = make_lattice_batch(0, batch=4, num_frames=16, num_states=8)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shard = lattice_shardings(mesh, lat)
+    assert jax.tree.structure(shard) == jax.tree.structure(lat)
+    for s, leaf in zip(jax.tree.leaves(shard), jax.tree.leaves(lat)):
+        assert s.spec[0] == ("data",), s          # B=4 divides data=1
+        assert all(ax is None for ax in s.spec[1:])
+        assert len(s.spec) == leaf.ndim
+
+
+def test_sequence_input_shardings_batch_leading():
+    from repro.data.synthetic import asr_batch
+    b = asr_batch(0, batch=4, num_frames=16, num_states=8, input_dim=6)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    shard = sequence_input_shardings(mesh, b)
+    assert shard["feats"].spec == P(("data",), None, None)
+    assert shard["labels"].spec == P(("data",), None)
+    assert shard["lattice"].preds.spec == P(("data",), None, None)
+    assert shard["lattice"].level_arcs.spec == P(("data",), None, None)
+    assert shard["lattice"].num_ref_units.spec == P(("data",))
+
+
+@pytest.mark.slow
+def test_sequence_step_matches_single_device():
+    """A jitted build_sequence_step MPE/NGHF update on an 8-device CPU mesh
+    (4-way data parallel) must match the single-device update to float
+    tolerance.  Runs in a subprocess: the forced device count must be set
+    before jax initialises."""
+    script = textwrap.dedent("""
+        import numpy as np, jax
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs.acoustic import LSTM
+        from repro.core.nghf import SecondOrderConfig
+        from repro.data.synthetic import asr_batch
+        from repro.launch.steps import build_sequence_step
+        from repro.launch.sharding import sequence_input_shardings
+        from repro.models import acoustic
+
+        assert jax.device_count() >= 8, jax.device_count()
+        acfg = LSTM.smoke().replace(hidden_dim=16, num_outputs=12)
+        socfg = SecondOrderConfig(method="nghf", cg_iters=2, ng_iters=1)
+        params = acoustic.init_params(acfg, jax.random.PRNGKey(0))
+        counts = acoustic.share_counts(acfg, params)
+        kw = dict(num_frames=16, num_states=12, input_dim=acfg.input_dim)
+        gb = asr_batch(0, batch=8, **kw)
+        cb = asr_batch(1, batch=4, **kw)
+
+        step1 = jax.jit(build_sequence_step(acfg, socfg, loss="mpe",
+                                            kappa=0.5, share_counts=counts))
+        p1, m1 = step1(params, gb, cb)
+
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(4, 2),
+                    ("data", "model"))
+        pshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+        step2 = jax.jit(build_sequence_step(acfg, socfg, loss="mpe",
+                                            kappa=0.5, mesh=mesh,
+                                            state_sharding=pshard,
+                                            share_counts=counts))
+        p2, m2 = step2(jax.device_put(params, pshard),
+                       jax.device_put(gb, sequence_input_shardings(mesh, gb)),
+                       jax.device_put(cb, sequence_input_shardings(mesh, cb)))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+        print("SEQ_SHARD_OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SEQ_SHARD_OK" in out.stdout
 
 
 def test_hlo_analysis_trip_counts():

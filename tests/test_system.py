@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# driver tests jit full training/serving steps — minutes of compile time on
+# CPU; CI's tier-1 lane runs with -m "not slow" (the full lane runs all)
+pytestmark = pytest.mark.slow
+
 
 def test_train_driver_nghf(tmp_path):
     from repro.launch.train import main
