@@ -11,6 +11,21 @@ the levelized-vs-per-arc speedup across commits:
 
 (B = batch, S = segments/levels, A = alternatives per segment; the arc
 count is S*A.)
+
+It also times the CANDIDATE-EVALUATION path (value only, no gradient —
+what ``cg_solve``'s per-iteration ``eval_fn`` executes, ~73 % of CG wall
+time in paper Table 1) with ``accumulators="full"`` vs the fused
+``"loss_only"`` mode, per backend:
+
+    {"bench": "lattice_engine_candidate_eval", "backend": "pallas",
+     "accumulators": "loss_only", "B": 8, "S": 64, "A": 3,
+     "ms_per_eval": 0.42}
+
+Note the "full" rows are already DCE-optimised by XLA (unused backward
+statistics drop out of a jitted value-only graph), so scan/levelized
+loss_only rows land ≈ equal to full — the structural win shows up in the
+Pallas rows, where loss_only swaps the score-gather + forward-kernel
+graph for the single fused kernel.
 """
 from __future__ import annotations
 
@@ -51,6 +66,27 @@ def backend_stage_fns(lat, lp, backends=("scan", "levelized", "pallas")):
     return fns
 
 
+def candidate_eval_fns(lat, lp, backends=("scan", "levelized", "pallas")):
+    """Jitted LOSS-VALUE-ONLY functions — the per-CG-iteration candidate
+    evaluation — per (backend, accumulators mode)."""
+    fns = {}
+    for backend in backends:
+        for acc in ("full", "loss_only"):
+            def stage(lp_, be=backend, acc_=acc):
+                st = lattice_stats(lat, lp_, 0.5, backend=be,
+                                   accumulators=acc_)
+                return jnp.sum(st.logZ) - jnp.sum(st.c_avg)
+
+            fn = jax.jit(stage)
+            try:
+                jax.block_until_ready(fn(lp))
+            except Exception as e:             # backend unavailable here
+                print(f"# candidate_eval.{backend}.{acc} skipped: {e}")
+                continue
+            fns[(backend, acc)] = fn
+    return fns
+
+
 def run(budget: str = "small", json_out: str | None = None):
     rows = []
     json_rows = []
@@ -68,6 +104,17 @@ def run(budget: str = "small", json_out: str | None = None):
             rec = {"bench": "lattice_engine", "backend": backend,
                    "B": B, "S": S, "A": A,
                    "ms_per_update": round(us / 1e3, 4)}
+            json_rows.append(rec)
+            print(json.dumps(rec))
+        for (backend, acc), us in time_compare(candidate_eval_fns(lat, lp),
+                                               lp).items():
+            rows.append(emit(
+                f"lattice_candidate_eval.{backend}.{acc}.B{B}S{S}A{A}", us,
+                f"ms_per_eval={us / 1e3:.3f}"))
+            rec = {"bench": "lattice_engine_candidate_eval",
+                   "backend": backend, "accumulators": acc,
+                   "B": B, "S": S, "A": A,
+                   "ms_per_eval": round(us / 1e3, 4)}
             json_rows.append(rec)
             print(json.dumps(rec))
     if json_out:

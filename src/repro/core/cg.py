@@ -9,8 +9,16 @@ Three paper-specific features on top of textbook CG:
 
   1. **Candidate-update selection** — every iterate Δθ_m is (optionally)
      evaluated on the CG batch and the argmin candidate is returned
-     (Alg. 1's "best performance on the validation set"; 73 % of CG wall
-     time in paper Table 1).
+     (Alg. 1's "best performance on the validation set").  Candidate
+     evaluation dominates the CG stage (~73 % of CG wall time in paper
+     Table 1); ``eval_fn`` should therefore be the loss-only fast path —
+     ``SecondOrderConfig.eval_accumulators="loss_only"`` wires
+     ``CurvatureOps.eval_loss`` through the lattice engine's fused
+     forward-only statistics (no backward recursion, no per-arc tensors),
+     cutting the per-iteration evaluation cost.  With ``eval_every > 1``
+     intermediate iterates are skipped, but the FINAL iterate is always
+     evaluated — the deepest candidate must never be silently excluded
+     from selection.
   2. **Shared-parameter preconditioning** (Sec. 4.3) — diagonal PCG with
      M⁻¹ = diag(1/c), c = per-leaf share counts: equivalently plain CG in
      the √c-rescaled variable space, i.e. residuals/directional derivatives
@@ -99,7 +107,10 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
         # Bx = b - r  =>  g(x) = -0.5 (xᵀb + xᵀr): no extra B product.
         quad = -0.5 * (tm.vdot(x_new, r_new) + tm.vdot(x_new, b))
         if eval_fn is not None:
-            do_eval = (m % eval_every) == 0
+            # always evaluate the final iterate: with eval_every > 1 the
+            # deepest candidate would otherwise be skipped whenever
+            # (iters - 1) % eval_every != 0
+            do_eval = ((m % eval_every) == 0) | (m == iters - 1)
             loss = jax.lax.cond(do_eval & ~bad,
                                 lambda: eval_fn(x_new),
                                 lambda: jnp.asarray(jnp.inf, jnp.float32))

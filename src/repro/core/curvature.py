@@ -27,6 +27,7 @@ the CG iterations needed from ~200 to 5-8.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Callable, NamedTuple
 
 import jax
@@ -47,8 +48,15 @@ class CurvatureOps(NamedTuple):
 def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
                        stabilize: bool = True,
                        theta_norm=None,
-                       mode: str = "rematvp") -> CurvatureOps:
+                       mode: str = "rematvp",
+                       eval_accumulators: str = "full") -> CurvatureOps:
     """forward_fn(params, batch) -> (logits, aux).
+
+    eval_accumulators: statistics mode for ``eval_loss`` (the per-CG-
+    iteration candidate evaluation).  "loss_only" asks the LossSpec for
+    its value-only fast path (lattice losses skip the backward recursion
+    / run the fused Pallas kernel); "full" keeps the default statistics
+    set.  The gradient/curvature products are unaffected either way.
 
     mode="linearize": linearize ONCE and reuse residuals across CG
     iterations — fastest, but holds every forward intermediate of the CG
@@ -110,9 +118,29 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
     def fvp(v):
         return _product(loss_spec.fisher_vp, v)
 
+    # pass the kwarg only to LossSpecs that declare it, so specs with the
+    # pre-accumulators signature keep working under the default
+    # "loss_only" mode (they have no statistics to elide anyway)
+    eval_kw = {}
+    if eval_accumulators != "full":
+        try:
+            sig = inspect.signature(loss_spec.value).parameters
+            accepts = "accumulators" in sig or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in sig.values())
+        except (TypeError, ValueError):
+            accepts = False
+        if accepts:
+            eval_kw = {"accumulators": eval_accumulators}
+
     def eval_loss(delta):
-        lg, _ = forward_fn(tm.add(params, tm.cast_like(delta, params)), batch)
-        return loss_spec.value(lg, batch)[0]
+        lg, aux = forward_fn(tm.add(params, tm.cast_like(delta, params)),
+                             batch)
+        # include the scaled auxiliary loss: grad_and_loss minimises
+        # ``loss + aux``, so Alg. 1 candidate selection / reject_worse
+        # must rank candidates by the SAME objective (dropping aux made
+        # selection compare a different function than the one optimised)
+        return loss_spec.value(lg, batch, **eval_kw)[0] + aux
 
     return CurvatureOps(gnvp=gnvp, fvp=fvp, eval_loss=eval_loss, logits=logits)
 

@@ -47,7 +47,18 @@ class SecondOrderConfig:
     precondition: bool = True     # Sec. 4.3 shared-parameter scaling
     eval_candidates: bool = True  # Alg. 1 candidate selection
     reject_worse: bool = True     # keep θ when no candidate beats Δθ=0
-    eval_every: int = 1
+    eval_every: int = 1           # candidate-eval stride (the final CG
+                                  # iterate is always evaluated)
+    eval_accumulators: str = "loss_only"
+                                  # statistics mode for the per-CG-iteration
+                                  # candidate evaluation (Alg. 1 — ~73 % of
+                                  # CG wall time in paper Table 1):
+                                  # "loss_only" computes just (logZ, c_avg)
+                                  # — no backward recursion; one fused
+                                  # forward kernel on the Pallas backend —
+                                  # while the gradient/curvature stages
+                                  # keep full statistics.  "full" restores
+                                  # the complete FBStats evaluation.
     step_scale: float = 1.0       # trust-region style final scaling
     curvature_mode: str = "rematvp"   # rematvp | linearize (see curvature.py)
     grad_microbatches: int = 1        # sequential grad accumulation (memory)
@@ -91,7 +102,8 @@ def second_order_update(forward_fn: Callable, loss_spec, cfg: SecondOrderConfig,
     theta_norm = tm.norm(params)
     ops = make_curvature_ops(forward_fn, loss_spec, params, cg_batch,
                              stabilize=cfg.stabilize, theta_norm=theta_norm,
-                             mode=cfg.curvature_mode)
+                             mode=cfg.curvature_mode,
+                             eval_accumulators=cfg.eval_accumulators)
     precond = share_counts if (cfg.precondition and share_counts is not None) \
         else None
 

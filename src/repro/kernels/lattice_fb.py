@@ -33,6 +33,33 @@ contribute nothing; a fully-masked segment (arc-count padding from
 passes the carry through unchanged, so ``logZ``/``c_avg`` are exact for
 ragged batches.
 
+A third, *fused loss-only* kernel (``sausage_loss_only``) serves the CG
+stage's candidate evaluation (paper Alg. 1 — ~73 % of CG wall time in
+Table 1): it takes the mean-centred log-prob cumsum grid (one batched
+streaming O(T*K) pass over the frame log-probabilities, the same
+identity as ``lattice_engine.common.arc_scores``) plus the ARC-LAYOUT
+lattice fields, and — inside the kernel — gathers the 2A span endpoints
+into per-arc scores, gathers arcs into the (segments, alternatives)
+layout via ``level_arcs``, and runs only the forward recursion, emitting
+just ``(logZ, c_avg)``.  No (B, A) or (B, S, A) score tensors are
+materialised, no alpha/c_alpha tiles are written, and no backward pass
+runs: the candidate-eval graph is one streaming pass over the log-probs
+plus one kernel whose intermediates stay VMEM-resident instead of
+round-tripping (B, S, A) statistics through HBM.
+
+TPU mapping of the fused kernel: BATCH-BLOCKED — one kernel invocation
+holds the whole (B, (T+1)K) cumsum grid plus the packed (B, 4, A) arc
+fields in VMEM (≈300 KB at the paper-scale shapes, far under the 16 MB
+budget), does two combined vector gathers (endpoints, arc->sausage), and
+runs the segment recursion on (B, W) frontier rows with the carries in
+registers.  Batching the grid into the block (instead of gridding over
+utterances like the kernel pair) keeps the gathers wide and amortises
+the per-step control overhead; gridding over batch *chunks* when the
+cumsum tile outgrows VMEM is future work alongside the general-DAG
+kernel.  The arbitrary-index gathers are exercised in interpreter mode
+everywhere except real TPU backends (same ``interpret`` auto-detection
+as the kernel pair; compiled-mode TPU validation is a ROADMAP item).
+
 TPU mapping: grid over the batch; per-utterance (S, A) score/corr/mask
 tiles in VMEM; the sequential segment recursion runs inside the kernel
 with the running carries in registers/VMEM scratch — the HBM->VMEM traffic
@@ -165,6 +192,119 @@ def sausage_forward(scores, corr, mask=None, *, interpret: bool | None = None):
         interpret=_auto_interpret(interpret),
     )(scores, corr, mask.astype(jnp.float32))
     return alpha, c_alpha, logz[:, 0], cavg[:, 0]
+
+
+def _loss_only_kernel(cum_ref, idx_ref, fcs_ref, level_ref, logz_ref,
+                      cavg_ref, *, num_segments: int, num_arcs: int):
+    """Fused candidate-evaluation kernel, batch-blocked: arc scores
+    (ONE combined endpoint gather on the centred cumsum grid), the
+    arc->sausage gather (one more), and the forward-only recursion all
+    live in the kernel; only the (B,) outputs are written.
+
+    cum:   (B, (T+1)*K + K) centred cumsum grid flattened per utterance,
+           PRE-SCALED by kappa, with the (scaled) per-state means appended
+           as a trailing pseudo-row (one streaming O(T*K) pass over the
+           log-probs, done outside — see ``sausage_loss_only``; scaling
+           the grid is exactly scaling the acoustic score, so kappa never
+           needs to be a kernel constant and may be traced).
+    idx:   (B, 3*A) int32 — [end*K+label | start*K+label | mean-row+label]
+           gather positions into ``cum``.
+    fcs:   (B, 4, A) f32 — packed [span, lm, corr, arc_mask] arc fields.
+    level: (B, S, W) int32 level_arcs frontier map (-1 padded).
+    """
+    cum = cum_ref[...]
+    g = jnp.take_along_axis(cum, idx_ref[...], axis=1)         # (B, 3A)
+    A = num_arcs
+    fcs = fcs_ref[...]
+    # centred partial sums stay O(sqrt(T)) so short-span endpoint
+    # differences don't cancel catastrophically at large T; the removed
+    # linear ramp is restored exactly from span * mu[label]
+    score_arc = (g[:, :A] - g[:, A:2 * A]
+                 + fcs[:, 0] * g[:, 2 * A:]) + fcs[:, 1]
+    la = level_ref[...]                                        # (B, S, W)
+    B, S, W = la.shape
+    safe = jnp.maximum(la, 0).reshape(B, 1, S * W)
+    stacked = jnp.stack([score_arc, fcs[:, 2], fcs[:, 3]], axis=1)
+    gath = jnp.take_along_axis(stacked, safe, axis=2).reshape(B, 3, S, W)
+    score, corr = gath[:, 0], gath[:, 1]
+    mask = jnp.where(la >= 0, gath[:, 2], 0.0)
+
+    # the segment loop is the plain forward kernel's, batched over B —
+    # minus its per-step alpha/c_alpha VMEM writes
+    def seg_step(s, carry):
+        in_log, c_in = carry                                   # (B,)
+        m = mask[:, s]
+        valid = m > 0.5
+        seg_valid = jnp.max(m, axis=1) > 0.5
+        row = jnp.where(valid, score[:, s] + in_log[:, None], NEG)
+        c_row = jnp.where(valid, corr[:, s] + c_in[:, None], 0.0)
+        mx = row.max(axis=1)
+        e = jnp.exp(row - mx[:, None]) * m
+        z = e.sum(axis=1)
+        new_in_log = jnp.where(seg_valid,
+                               jnp.log(jnp.maximum(z, _EPS)) + mx, in_log)
+        w = e / jnp.maximum(z, _EPS)[:, None]
+        new_c_in = jnp.where(seg_valid, jnp.sum(w * c_row, axis=1), c_in)
+        return new_in_log, new_c_in
+
+    in_log, c_in = jax.lax.fori_loop(
+        0, num_segments, seg_step,
+        (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32)))
+    logz_ref[...] = in_log
+    cavg_ref[...] = c_in
+
+
+def sausage_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
+                      level_arcs, *, kappa: float = 1.0,
+                      interpret: bool | None = None):
+    """Fused loss-only forward: (logZ (B,), c_avg (B,)) straight from the
+    frame log-probs and ARC-LAYOUT lattice fields.
+
+    log_probs: (B, T, K) frame log-probabilities; start/end/label:
+    (B, A) int32 arc span endpoints and output units (pad arcs may hold
+    any in-range index — ``arc_mask`` must zero them); lm/corr/arc_mask:
+    (B, A); level_arcs: (B, S, W) int32 frontier map (-1 padded) — the
+    arc->sausage gather happens inside the kernel.  ``kappa`` is the
+    acoustic scale; it is folded into the cumsum grid (a linear map), so
+    a traced/jitted kappa works like on the other backends.
+
+    Not differentiable directly (Pallas calls have no autodiff rules) —
+    ``lattice_engine.pallas_backend`` wraps it in a ``custom_jvp``.
+    """
+    B, T, K = log_probs.shape
+    A = start.shape[1]
+    S, W = level_arcs.shape[1], level_arcs.shape[2]
+    # mean-centred cumsum grid, ONE batched streaming pass over the
+    # log-probs; the per-state means ride along as a trailing pseudo-row
+    # so the kernel's single combined gather also fetches mu[label], and
+    # kappa is folded in here (the score is linear in the grid).
+    # Centring keeps short-span endpoint differences accurate at large T;
+    # see common.arc_scores.
+    lp = log_probs.astype(jnp.float32)
+    mu = jnp.mean(lp, axis=1)                                  # (B, K)
+    cum = jnp.cumsum(lp - mu[:, None, :], axis=1)
+    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
+    cumext = jnp.concatenate([cum.reshape(B, -1), mu], axis=1) * kappa
+    # gather positions + packed per-arc float fields (cheap int/stack ops;
+    # everything downstream happens inside the kernel)
+    lab = label.astype(jnp.int32)
+    idx = jnp.concatenate(
+        [end.astype(jnp.int32) * K + lab, start.astype(jnp.int32) * K + lab,
+         (T + 1) * K + lab], axis=1)                           # (B, 3A)
+    span = (end - start).astype(jnp.float32)
+    fcs = jnp.stack([span, lm.astype(jnp.float32), corr.astype(jnp.float32),
+                     arc_mask.astype(jnp.float32)], axis=1)    # (B, 4, A)
+    kernel = functools.partial(_loss_only_kernel, num_segments=S,
+                               num_arcs=A)
+    logz, cavg = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=_auto_interpret(interpret),
+    )(cumext, idx, fcs, level_arcs.astype(jnp.int32))
+    return logz, cavg
 
 
 def sausage_backward(scores, corr, mask=None, *,

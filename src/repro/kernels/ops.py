@@ -17,6 +17,7 @@ from repro.kernels import ref
 from repro.kernels.cg_fused import cg_fused_update as _cg_pallas
 from repro.kernels.lattice_fb import sausage_backward as _fb_bwd_pallas
 from repro.kernels.lattice_fb import sausage_forward as _fb_pallas
+from repro.kernels.lattice_fb import sausage_loss_only as _fb_loss_only_pallas
 from repro.kernels.swa_attention import swa_attention as _swa_pallas
 
 
@@ -42,6 +43,22 @@ def sausage_backward(scores, corr, mask=None, *, use_pallas: bool = True):
     if not use_pallas:
         return ref.sausage_backward_ref(scores, corr, mask)
     return _fb_bwd_pallas(scores, corr, mask, interpret=None)
+
+
+def sausage_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
+                      level_arcs, *, kappa: float = 1.0,
+                      use_pallas: bool = True):
+    """Fused candidate-evaluation forward: (logZ, c_avg) straight from the
+    (B, T, K) frame log-probs + arc-layout lattice fields (score
+    construction and the arc->sausage gather both happen in-graph /
+    in-kernel; no per-arc statistics materialised)."""
+    if not use_pallas:
+        return ref.sausage_loss_only_ref(log_probs, start, end, label, lm,
+                                         corr, arc_mask, level_arcs,
+                                         kappa=kappa)
+    return _fb_loss_only_pallas(log_probs, start, end, label, lm, corr,
+                                arc_mask, level_arcs, kappa=kappa,
+                                interpret=None)
 
 
 def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool = True):

@@ -87,6 +87,53 @@ def sausage_backward_ref(scores, corr, mask=None):
     return jax.vmap(per_utt)(scores, corr, mask)
 
 
+def sausage_arc_scores_ref(log_probs, start, end, label, kappa: float):
+    """Per-arc acoustic scores from (B, T, K) log-probs via the
+    mean-centred cumsum endpoint gather (pure jnp; the same identity as
+    ``lattice_engine.common.arc_scores``), for any common index shape
+    (B, ...) — arc layout (B, A) or sausage layout (B, S, W).
+
+    Linear in ``log_probs`` — the fused kernel's ``custom_jvp`` applies
+    this very function to the tangents.
+    """
+    B, T, K = log_probs.shape
+    shp = start.shape
+    lp = log_probs.astype(jnp.float32)
+    mu = jnp.mean(lp, axis=1, keepdims=True)                  # (B, 1, K)
+    cum = jnp.cumsum(lp - mu, axis=1)
+    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
+    flat = cum.reshape(B, (T + 1) * K)                        # (B, (T+1)K)
+    lab = label.reshape(B, -1).astype(jnp.int32)
+    hi = jnp.take_along_axis(flat, end.reshape(B, -1) * K + lab, axis=1)
+    lo = jnp.take_along_axis(flat, start.reshape(B, -1) * K + lab, axis=1)
+    span = (end - start).reshape(B, -1).astype(jnp.float32)
+    mu_lab = jnp.take_along_axis(mu[:, 0, :], lab, axis=1)
+    return (kappa * (hi - lo + span * mu_lab)).reshape(shp)
+
+
+def gather_sausage_ref(values, level_arcs, fill):
+    """(B, A) arc values -> (B, S, W) sausage layout via the level_arcs
+    frontier map (-1 slots get ``fill``)."""
+    safe = jnp.maximum(level_arcs, 0)
+    g = jax.vmap(lambda v, i: v[i])(values, safe)
+    return jnp.where(level_arcs >= 0, g, fill)
+
+
+def sausage_loss_only_ref(log_probs, start, end, label, lm, corr, arc_mask,
+                          level_arcs, *, kappa: float = 1.0):
+    """Oracle of the fused loss-only kernel: in-graph score construction,
+    arc->sausage gather, and masked forward recursion, returning only
+    (logZ (B,), c_avg (B,)).  All lattice fields in arc layout (B, A);
+    level_arcs: (B, S, W) int32 (-1 padded)."""
+    score_arc = sausage_arc_scores_ref(log_probs, start, end, label, kappa) \
+        + lm.astype(jnp.float32)                              # (B, A)
+    scores = gather_sausage_ref(score_arc, level_arcs, 0.0)
+    co = gather_sausage_ref(corr.astype(jnp.float32), level_arcs, 0.0)
+    mk = gather_sausage_ref(arc_mask.astype(jnp.float32), level_arcs, 0.0)
+    _, _, logz, cavg = sausage_forward_ref(scores, co, mk)
+    return logz, cavg
+
+
 def cg_fused_update_ref(alpha, x, v, r, bv):
     xf = x.astype(jnp.float32)
     vf = v.astype(jnp.float32)

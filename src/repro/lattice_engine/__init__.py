@@ -9,19 +9,24 @@ implementations.  ``MMILoss``/``MPELoss`` (``losses/sequence.py``) route
 through this package; ``losses/forward_backward.py`` is a thin
 compatibility shim over the scan backend.
 """
-from repro.lattice_engine.api import (BACKENDS, lattice_is_sausage,
-                                      lattice_stats, resolve_backend)
-from repro.lattice_engine.common import (FBStats, arc_scores, finalize,
+from repro.lattice_engine.api import (ACCUMULATORS, BACKENDS,
+                                      lattice_is_sausage, lattice_stats,
+                                      resolve_backend)
+from repro.lattice_engine.common import (FBStats, LossStats, arc_scores,
+                                         finalize, finalize_loss_only,
                                          frame_state_occupancy)
 from repro.lattice_engine.levelized import forward_backward_levelized
 from repro.lattice_engine.pallas_backend import forward_backward_pallas
 from repro.lattice_engine.scan_backend import forward_backward_scan
 
 __all__ = [
+    "ACCUMULATORS",
     "BACKENDS",
     "FBStats",
+    "LossStats",
     "arc_scores",
     "finalize",
+    "finalize_loss_only",
     "forward_backward_levelized",
     "forward_backward_pallas",
     "forward_backward_scan",

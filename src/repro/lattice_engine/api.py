@@ -2,6 +2,19 @@
 
     stats = lattice_stats(lat, log_probs, kappa, backend="auto")
 
+``accumulators`` selects how much of the statistics set is computed:
+
+  * ``"full"``      — the complete arc-layout ``FBStats`` (alpha, beta,
+                      gamma, correctness accumulators, logZ, c_avg).
+  * ``"loss_only"`` — just ``LossStats(logZ, c_avg)``: the scan/levelized
+                      backends skip the backward recursion entirely, and
+                      the Pallas backend runs the FUSED forward-only
+                      kernel (arc scores built in-kernel from the frame
+                      log-probs — no per-arc statistics in the graph).
+                      This is the CG candidate-evaluation fast path
+                      (paper Alg. 1; ~73 % of CG wall time in Table 1).
+                      Values and grads agree with the full path (tested).
+
 Backends (all produce the same arc-layout ``FBStats``):
 
   * ``"scan"``      — per-arc ``lax.scan`` reference (O(A) sequential steps)
@@ -24,7 +37,9 @@ import os
 
 import jax
 
-from repro.lattice_engine.common import FBStats, lattice_is_sausage
+from repro.lattice_engine.common import (ACCUMULATORS, FBStats, LossStats,
+                                         check_accumulators,
+                                         lattice_is_sausage)
 from repro.lattice_engine.levelized import forward_backward_levelized
 from repro.lattice_engine.pallas_backend import forward_backward_pallas
 from repro.lattice_engine.scan_backend import forward_backward_scan
@@ -59,7 +74,8 @@ def resolve_backend(backend: str, lat: Lattice) -> str:
 
 
 def lattice_stats(lat: Lattice, log_probs, kappa: float,
-                  backend: str = "auto", mesh=None) -> FBStats:
+                  backend: str = "auto", mesh=None,
+                  accumulators: str = "full") -> FBStats | LossStats:
     """Differentiable lattice forward-backward statistics (one API over
     the scan / levelized / Pallas backends).
 
@@ -68,6 +84,11 @@ def lattice_stats(lat: Lattice, log_probs, kappa: float,
     ``with_sharding_constraint``-ed to its data axes so the statistics
     stage stays GSPMD data-parallel under pjit (see
     ``launch.sharding.lattice_shardings`` for the input side).
+
+    ``accumulators``: ``"full"`` -> ``FBStats``; ``"loss_only"`` ->
+    ``LossStats(logZ, c_avg)`` with the backward recursion (and, on the
+    Pallas backend, all per-arc statistics) elided — see module docstring.
     """
-    return _DISPATCH[resolve_backend(backend, lat)](lat, log_probs, kappa,
-                                                    mesh=mesh)
+    check_accumulators(accumulators)
+    return _DISPATCH[resolve_backend(backend, lat)](
+        lat, log_probs, kappa, mesh=mesh, accumulators=accumulators)

@@ -31,6 +31,27 @@ class FBStats(NamedTuple):
     c_arc: jnp.ndarray       # (B, A) c_q = c_alpha + c_beta
 
 
+class LossStats(NamedTuple):
+    """The ``accumulators="loss_only"`` contract: exactly what the MMI/MPE
+    loss *values* need — no per-arc statistics, no backward recursion.
+    Field names/meanings match the ``FBStats`` members of the same name so
+    loss code is agnostic to which mode produced the statistics."""
+
+    logZ: jnp.ndarray        # (B,) total lattice log score
+    c_avg: jnp.ndarray       # (B,) expected total correctness
+
+
+ACCUMULATORS = ("full", "loss_only")
+
+
+def check_accumulators(accumulators: str) -> str:
+    if accumulators not in ACCUMULATORS:
+        raise ValueError(
+            f"unknown accumulators mode {accumulators!r}; expected one of "
+            f"{ACCUMULATORS}")
+    return accumulators
+
+
 def arc_scores(lat: Lattice, log_probs: jnp.ndarray, kappa: float):
     """Per-arc acoustic score: kappa * sum_{t in span} log p(label | o_t).
 
@@ -45,19 +66,14 @@ def arc_scores(lat: Lattice, log_probs: jnp.ndarray, kappa: float):
     difference of a short span cancels catastrophically against the
     cumulative magnitude.  Centred partial sums stay O(√T·σ); the removed
     linear ramp is restored exactly from the span length.
+
+    The identity itself lives in ``kernels.ref.sausage_arc_scores_ref``
+    (one copy, shared with the fused loss-only kernel's oracle and its
+    ``custom_jvp`` tangent rule).
     """
-    B, T, K = log_probs.shape
-    lp = log_probs.astype(jnp.float32)
-    mu = jnp.mean(lp, axis=1, keepdims=True)                  # (B, 1, K)
-    cum = jnp.cumsum(lp - mu, axis=1)
-    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
-    flat = cum.reshape(B, (T + 1) * K)                        # (B,(T+1)K)
-    lab = lat.label.astype(jnp.int32)
-    hi = jnp.take_along_axis(flat, lat.end_t * K + lab, axis=1)
-    lo = jnp.take_along_axis(flat, lat.start_t * K + lab, axis=1)
-    span = (lat.end_t - lat.start_t).astype(jnp.float32)
-    mu_lab = jnp.take_along_axis(mu[:, 0, :], lab, axis=1)    # (B, A)
-    return kappa * (hi - lo + span * mu_lab)
+    from repro.kernels.ref import sausage_arc_scores_ref
+    return sausage_arc_scores_ref(log_probs, lat.start_t, lat.end_t,
+                                  lat.label, kappa)
 
 
 def gather_log(arr, idx):
@@ -131,16 +147,26 @@ def data_constrainer(mesh):
     return constrain
 
 
+def finalize_loss_only(lat: Lattice, alpha, c_alpha,
+                       constrain=None) -> LossStats:
+    """Reduce forward-only scores to (logZ, c_avg) — the final-arc
+    reduction shared by both accumulator modes."""
+    c = constrain if constrain is not None else (lambda x: x)
+    alpha, c_alpha = c(alpha), c(c_alpha)
+    final_alpha = jnp.where(lat.is_final & lat.arc_mask, alpha, NEG)
+    logZ = masked_logsumexp(final_alpha, axis=-1)               # (B,)
+    wf = masked_softmax(final_alpha, axis=-1)
+    c_avg = jnp.sum(wf * c_alpha, axis=-1)
+    return LossStats(logZ=logZ, c_avg=c_avg)
+
+
 def finalize(lat: Lattice, alpha, beta, c_alpha, c_beta,
              constrain=None) -> FBStats:
     """Reduce per-arc forward/backward scores to the full statistics set."""
     c = constrain if constrain is not None else (lambda x: x)
     alpha, beta = c(alpha), c(beta)
     c_alpha, c_beta = c(c_alpha), c(c_beta)
-    final_alpha = jnp.where(lat.is_final & lat.arc_mask, alpha, NEG)
-    logZ = masked_logsumexp(final_alpha, axis=-1)               # (B,)
-    wf = masked_softmax(final_alpha, axis=-1)
-    c_avg = jnp.sum(wf * c_alpha, axis=-1)
+    logZ, c_avg = finalize_loss_only(lat, alpha, c_alpha)
     gamma = c(jnp.where(lat.arc_mask,
                         jnp.exp(alpha + beta - logZ[:, None]), 0.0))
     return FBStats(alpha=alpha, beta=beta, logZ=logZ, gamma=gamma,

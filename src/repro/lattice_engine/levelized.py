@@ -26,8 +26,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
-                                         data_constrainer, finalize,
+from repro.lattice_engine.common import (NEG, FBStats, LossStats, arc_scores,
+                                         check_accumulators, data_constrainer,
+                                         finalize, finalize_loss_only,
                                          masked_logsumexp, masked_softmax)
 from repro.losses.lattice import Lattice
 
@@ -136,8 +137,15 @@ def _backward_levels(own, corr, succs, is_final, mask, level_arcs):
 
 
 def forward_backward_levelized(lat: Lattice, log_probs: jnp.ndarray,
-                               kappa: float, mesh=None) -> FBStats:
-    """Full lattice statistics via the level-parallel scan, vmapped over B."""
+                               kappa: float, mesh=None,
+                               accumulators: str = "full"
+                               ) -> FBStats | LossStats:
+    """Lattice statistics via the level-parallel scan, vmapped over B.
+
+    ``accumulators="loss_only"`` runs only the forward level scan (no
+    beta/c_beta recursion) and returns ``LossStats(logZ, c_avg)``.
+    """
+    check_accumulators(accumulators)
     if lat.level_arcs is None:
         raise ValueError(
             "levelized backend needs Lattice.level_arcs; build batches with "
@@ -147,11 +155,13 @@ def forward_backward_levelized(lat: Lattice, log_probs: jnp.ndarray,
 
     alpha, c_alpha = jax.vmap(_forward_levels)(
         am, lat.corr, lat.preds, lat.is_start, lat.arc_mask, lat.level_arcs)
-    beta, c_beta = jax.vmap(_backward_levels)(
-        am, lat.corr, lat.succs, lat.is_final, lat.arc_mask, lat.level_arcs)
     # arcs outside every level (mask padding) read the dump slot: NEG/0
     alpha = jnp.where(lat.arc_mask, alpha, NEG)
-    beta = jnp.where(lat.arc_mask, beta, NEG)
     c_alpha = jnp.where(lat.arc_mask, c_alpha, 0.0)
+    if accumulators == "loss_only":
+        return finalize_loss_only(lat, alpha, c_alpha, constrain=c)
+    beta, c_beta = jax.vmap(_backward_levels)(
+        am, lat.corr, lat.succs, lat.is_final, lat.arc_mask, lat.level_arcs)
+    beta = jnp.where(lat.arc_mask, beta, NEG)
     c_beta = jnp.where(lat.arc_mask, c_beta, 0.0)
     return finalize(lat, alpha, beta, c_alpha, c_beta, constrain=c)

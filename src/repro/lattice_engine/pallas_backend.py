@@ -21,24 +21,37 @@ The auxiliary arc statistics (alpha, beta, gamma, ...) are returned as
 *constants* (no gradient flows through them); the losses only ever
 differentiate ``logZ``/``c_avg``, and under jit the unused direct kernel
 calls are dead-code-eliminated.
+
+``accumulators="loss_only"`` routes through the FUSED candidate-evaluation
+kernel instead (``kernels.lattice_fb.sausage_loss_only``): one batched
+streaming pass turns the (B,T,K) log-probs into the centred cumsum grid,
+and everything downstream — the span-endpoint gather that builds the
+per-arc scores, the arc->(S,W) sausage gather, and the forward recursion
+— happens inside one batch-blocked kernel.  No (B,A)/(B,S,W) score
+tensors, no per-arc statistics, and no backward kernel appear in the
+graph; only ``(logZ, c_avg)`` come back.  Its ``custom_jvp`` uses the
+same occupancy identities — the tangent rule *does* materialise scores
+and run the kernel pair (gradient and R-operator passes need gamma
+anyway); the fused path is the pure *value* evaluation that CG candidate
+selection executes per iteration.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lattice_fb import sausage_backward, sausage_forward
-from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
-                                         data_constrainer, lattice_is_sausage)
+from repro.kernels.lattice_fb import (sausage_backward, sausage_forward,
+                                      sausage_loss_only)
+from repro.kernels.ref import gather_sausage_ref, sausage_arc_scores_ref
+from repro.lattice_engine.common import (NEG, FBStats, LossStats, arc_scores,
+                                         check_accumulators, data_constrainer,
+                                         lattice_is_sausage)
 from repro.losses.lattice import Lattice
 
 
 def _to_sausage(lat: Lattice, values, fill):
     """Gather (B, A) arc values into (B, S, W) via level_arcs."""
-    la = lat.level_arcs                                        # (B, S, W)
-    safe = jnp.maximum(la, 0)
-    g = jax.vmap(lambda v, i: v[i])(values, safe)
-    return jnp.where(la >= 0, g, fill)
+    return gather_sausage_ref(values, lat.level_arcs, fill)
 
 
 def _from_sausage(lat: Lattice, values_sg, fill):
@@ -56,10 +69,8 @@ def _from_sausage(lat: Lattice, values_sg, fill):
 
 
 def _sausage_mask(lat: Lattice):
-    valid = lat.level_arcs >= 0
-    safe = jnp.maximum(lat.level_arcs, 0)
-    m = jax.vmap(lambda v, i: v[i])(lat.arc_mask, safe)
-    return (valid & m).astype(jnp.float32)
+    return gather_sausage_ref(lat.arc_mask.astype(jnp.float32),
+                              lat.level_arcs, 0.0)
 
 
 @jax.custom_jvp
@@ -88,13 +99,94 @@ def _sausage_logz_cavg_jvp(primals, tangents):
     return (logz, cavg), (dlogz, dcavg)
 
 
-def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
-                            kappa: float, mesh=None) -> FBStats:
-    """Full sausage-lattice statistics via the Pallas kernel pair.
+def _zero_if_symbolic(t):
+    """None for float0 / missing tangents (int primals), else f32 view."""
+    if t is None or not hasattr(t, "dtype") or t.dtype == jax.dtypes.float0:
+        return None
+    return t.astype(jnp.float32)
 
-    Only ``logZ`` and ``c_avg`` carry gradients (see module docstring);
-    the per-arc fields are statistics-as-constants.
+
+@jax.custom_jvp
+def fused_sausage_loss_only(kappa, log_probs, start, end, label, lm, corr,
+                            arc_mask, level_arcs):
+    """Differentiable fused (logZ, c_avg) straight from (B, T, K)
+    log-probs + ARC-LAYOUT lattice fields (B, A) and the (B, S, W)
+    level_arcs gather map.  ``kappa`` is a regular primal (it is folded
+    into the cumsum grid, so traced values work) with its own tangent.
+
+    The primal is ONE forward-only Pallas kernel (scores and the
+    arc->sausage gather built in-kernel, nothing but the two (B,) outputs
+    materialised).  The tangent rule falls back to materialised scores +
+    the kernel pair for gamma/c_arc — candidate evaluation never triggers
+    it; gradient passes do, and they need the full statistics regardless.
     """
+    return sausage_loss_only(log_probs, start, end, label, lm, corr,
+                             arc_mask, level_arcs, kappa=kappa)
+
+
+@fused_sausage_loss_only.defjvp
+def _fused_sausage_loss_only_jvp(primals, tangents):
+    kappa, log_probs, start, end, label, lm, corr, arc_mask, \
+        level_arcs = primals
+    dkappa, dlp, _, _, _, dlm, dcorr, _, _ = tangents  # int/bool tg are zero
+    score_arc = sausage_arc_scores_ref(log_probs, start, end, label, kappa) \
+        + lm.astype(jnp.float32)                                # (B, A)
+    scores_sg = gather_sausage_ref(score_arc, level_arcs, NEG)
+    corr_sg = gather_sausage_ref(corr.astype(jnp.float32), level_arcs, 0.0)
+    mask_sg = gather_sausage_ref(arc_mask.astype(jnp.float32),
+                                 level_arcs, 0.0)
+    # score construction + the sausage gather are LINEAR in (log_probs,
+    # lm, corr) and in kappa: the (log_probs, lm) tangents go through the
+    # same map, and d score / d kappa is the acoustic part at kappa = 1
+    dkappa = _zero_if_symbolic(dkappa)
+    dlp = _zero_if_symbolic(dlp)
+    dlm = _zero_if_symbolic(dlm)
+    dcorr = _zero_if_symbolic(dcorr)
+    ds_arc = None
+    if dlp is not None:
+        ds_arc = sausage_arc_scores_ref(dlp, start, end, label, kappa)
+    if dkappa is not None:
+        ac = dkappa * sausage_arc_scores_ref(log_probs, start, end,
+                                             label, 1.0)
+        ds_arc = ac if ds_arc is None else ds_arc + ac
+    if dlm is not None:
+        ds_arc = dlm if ds_arc is None else ds_arc + dlm
+    ds_sg = jnp.zeros_like(scores_sg) if ds_arc is None else \
+        gather_sausage_ref(ds_arc, level_arcs, 0.0)
+    dc_sg = jnp.zeros_like(corr_sg) if dcorr is None else \
+        gather_sausage_ref(dcorr, level_arcs, 0.0)
+    # delegate to the full path's occupancy-identity rule — ONE place owns
+    # the gamma/c_arc tangent math for both statistics modes
+    return jax.jvp(sausage_logz_cavg, (scores_sg, corr_sg, mask_sg),
+                   (ds_sg, dc_sg, jnp.zeros_like(mask_sg)))
+
+
+def _loss_only_pallas(lat: Lattice, log_probs: jnp.ndarray, kappa: float,
+                      constrain) -> LossStats:
+    """The fused candidate-evaluation path: raw arc-layout lattice fields
+    in, (logZ, c_avg) out — no score gather, no per-arc statistics, no
+    backward kernel anywhere in the graph."""
+    c = constrain
+    logZ, c_avg = fused_sausage_loss_only(
+        kappa, c(log_probs.astype(jnp.float32)),
+        lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+        lat.arc_mask, lat.level_arcs)
+    return LossStats(logZ=logZ, c_avg=c_avg)
+
+
+def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
+                            kappa: float, mesh=None,
+                            accumulators: str = "full"
+                            ) -> FBStats | LossStats:
+    """Sausage-lattice statistics via the Pallas kernels.
+
+    ``accumulators="full"`` runs the forward/backward kernel pair and
+    returns the complete ``FBStats``; only ``logZ`` and ``c_avg`` carry
+    gradients (see module docstring) — the per-arc fields are
+    statistics-as-constants.  ``accumulators="loss_only"`` runs the fused
+    forward-only kernel and returns ``LossStats``.
+    """
+    check_accumulators(accumulators)
     if lat.level_arcs is None:
         raise ValueError(
             "pallas backend needs Lattice.level_arcs; build batches with "
@@ -109,6 +201,8 @@ def forward_backward_pallas(lat: Lattice, log_probs: jnp.ndarray,
             "level l-1 and only last-level arcs final; use the "
             "'levelized' or 'scan' backend for general DAG lattices")
     c = data_constrainer(mesh)
+    if accumulators == "loss_only":
+        return _loss_only_pallas(lat, log_probs, kappa, c)
     am = c(arc_scores(lat, log_probs, kappa) + lat.lm)         # (B, A)
     scores_sg = c(_to_sausage(lat, am, NEG))
     corr_sg = _to_sausage(lat, lat.corr, 0.0)

@@ -11,8 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.lattice_engine.common import (NEG, FBStats, arc_scores,
-                                         data_constrainer, finalize,
+from repro.lattice_engine.common import (NEG, FBStats, LossStats, arc_scores,
+                                         check_accumulators, data_constrainer,
+                                         finalize, finalize_loss_only,
                                          gather_lin, gather_log,
                                          masked_logsumexp, masked_softmax)
 from repro.losses.lattice import Lattice
@@ -68,13 +69,22 @@ def _backward_single(lat_score, lm, corr, succs, is_final, mask):
 
 
 def forward_backward_scan(lat: Lattice, log_probs: jnp.ndarray,
-                          kappa: float, mesh=None) -> FBStats:
-    """Full lattice statistics via the per-arc scan, vmapped over B."""
+                          kappa: float, mesh=None,
+                          accumulators: str = "full") -> FBStats | LossStats:
+    """Lattice statistics via the per-arc scan, vmapped over B.
+
+    ``accumulators="loss_only"`` skips the backward recursion entirely and
+    returns just ``LossStats(logZ, c_avg)`` — the candidate-evaluation
+    fast path (the loss values only ever reduce final-arc alphas).
+    """
+    check_accumulators(accumulators)
     c = data_constrainer(mesh)
     am = c(arc_scores(lat, log_probs, kappa))                 # (B, A)
 
     alpha, c_alpha = jax.vmap(_forward_single)(
         am, lat.lm, lat.corr, lat.preds, lat.is_start, lat.arc_mask)
+    if accumulators == "loss_only":
+        return finalize_loss_only(lat, alpha, c_alpha, constrain=c)
     beta, c_beta = jax.vmap(_backward_single)(
         am, lat.lm, lat.corr, lat.succs, lat.is_final, lat.arc_mask)
     return finalize(lat, alpha, beta, c_alpha, c_beta, constrain=c)

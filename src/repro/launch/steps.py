@@ -5,7 +5,10 @@ multi-pod dry-run lower.
     the global batch + inner Fisher-CG + outer GN-CG with candidate
     selection on a CG sub-batch), as a single jitted function.  Under pjit
     the batch means become all-reduces over (pod, data) — the paper's
-    Fig. 1 distributed scheme.
+    Fig. 1 distributed scheme.  Candidate evaluation inside the CG stage
+    follows ``socfg.eval_accumulators`` ("loss_only" by default: the
+    LossSpec's value-only fast path — for the lattice losses that is the
+    engine's fused forward-only statistics).
   * ``build_sequence_step`` — the same two-stage update for the paper's
     actual workload: an acoustic model + lattice MMI/MPE ``LossSpec``.
     Takes an explicit CG batch (the paper samples it from the WHOLE
@@ -120,6 +123,13 @@ def build_sequence_step(acfg, socfg: SecondOrderConfig, *,
     ``state_sharding`` pins the θ-sized CG state, so jitting this function
     with ``launch.sharding.sequence_input_shardings``-placed batches runs
     both Fig. 1 stages GSPMD data-parallel.
+
+    The CG stage's per-iteration candidate evaluation (Alg. 1, the
+    dominant Table-1 cost) runs the statistics mode selected by
+    ``socfg.eval_accumulators`` — "loss_only" by default, i.e.
+    ``lattice_stats(..., accumulators="loss_only")``: forward-only
+    recursion on scan/levelized, ONE fused kernel on the Pallas backend.
+    The gradient and curvature stages always keep full statistics.
     """
     from repro.losses.sequence import get_loss
 

@@ -117,7 +117,11 @@ class ChunkedCELoss:
         return carry
 
     # --- loss ---------------------------------------------------------------
-    def value(self, out, batch) -> Tuple[jnp.ndarray, dict]:
+    def value(self, out, batch,
+              accumulators: str = "full") -> Tuple[jnp.ndarray, dict]:
+        # ``accumulators`` is part of the LossSpec interface (lattice
+        # losses elide statistics in "loss_only" mode); CE is already
+        # value-only.
         hidden, W = out
         B, T, _ = hidden.shape
         N = B * T

@@ -61,6 +61,25 @@ class Lattice(NamedTuple):
         return self.level_arcs.shape[-2]
 
 
+def lattice_frame_counts(lat: Lattice) -> jnp.ndarray:
+    """(B,) f32: REAL frames per utterance — the largest arc end time over
+    valid arcs.  ``make_sausage_lattice`` edge-pads ``ref_states`` up to
+    ``num_frames`` when ``seg_len`` does not divide it, so ``num_frames``
+    over-counts; frames past the last arc carry no lattice evidence and
+    must not enter loss normalisation (they would make the loss scale —
+    and hence the meaning of the CG λ/damping — depend on padding)."""
+    end = jnp.where(lat.arc_mask, lat.end_t, 0)
+    return jnp.max(end, axis=-1).astype(jnp.float32)
+
+
+def lattice_frame_mask(lat: Lattice) -> jnp.ndarray:
+    """(B, T) f32 mask: 1 on real frames (t < per-utterance frame count),
+    0 on the edge-padding of ``ref_states``."""
+    t = jnp.arange(lat.num_frames)
+    counts = lattice_frame_counts(lat)
+    return (t[None, :] < counts[:, None]).astype(jnp.float32)
+
+
 def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,
                   arc_mask: np.ndarray) -> np.ndarray:
     """Topological levelization of one lattice's arc DAG (numpy, unbatched).

@@ -3,10 +3,17 @@
 A ``LossSpec`` packages everything NGHF needs from a training criterion
 (paper Secs. 3.2, 3.4, 5.2):
 
-    value(logits, batch)          -> (scalar loss, metrics)
+    value(logits, batch, accumulators="full") -> (scalar loss, metrics)
     logit_grad(logits, batch)     -> G = dL/dlogits            (B,T,K)
     gn_vp(logits, batch, u)       -> per-frame GN factor product  H^ u
     fisher_vp(logits, batch, u)   -> per-frame empirical-Fisher product F^ u
+
+``value``'s ``accumulators`` selects the lattice-engine statistics mode:
+``"loss_only"`` computes only what the loss value needs (no backward
+recursion; on the Pallas backend one fused forward kernel) — this is what
+CG candidate evaluation runs per iteration (``CurvatureOps.eval_loss``,
+``SecondOrderConfig.eval_accumulators``).  Non-lattice losses accept and
+ignore it.
 
 Normalisation convention: ``value`` is a batch *mean*; both curvature
 factors are normalised the same way (mean over loss atoms), so
@@ -32,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.lattice_engine import lattice_stats
-from repro.losses.lattice import Lattice
+from repro.losses.lattice import (Lattice, lattice_frame_counts,
+                                  lattice_frame_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -52,7 +60,11 @@ class CELoss:
             m = jnp.ones(logits.shape[:2], jnp.float32)
         return m.astype(jnp.float32)
 
-    def value(self, logits, batch) -> Tuple[jnp.ndarray, Dict]:
+    def value(self, logits, batch,
+              accumulators: str = "full") -> Tuple[jnp.ndarray, Dict]:
+        # ``accumulators`` is part of the LossSpec interface (lattice
+        # losses have a cheap loss-only statistics mode); CE has nothing
+        # to elide.
         labels = batch["labels"]
         m = self._mask(logits, batch)
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
@@ -89,10 +101,15 @@ class CELoss:
 # ---------------------------------------------------------------------------
 
 class MMILoss:
-    """L = -(1/(B·T)) Σ_b (num_score_b - logZ_den_b).
+    """L = -(1/Σ_b T_b) Σ_b (num_score_b - logZ_den_b), with T_b the REAL
+    per-utterance frame count (``lattice_frame_counts``).
 
     batch["lattice"]: Lattice.  The numerator is the reference state
-    alignment (its LM score is a constant w.r.t. θ and is dropped).
+    alignment (its LM score is a constant w.r.t. θ and is dropped);
+    edge-padded ``ref_states`` frames past the last arc are masked out of
+    the numerator and excluded from the normaliser, so neither the loss
+    value nor its scale (and hence the meaning of λ/damping) depends on
+    how far the batch was padded.
 
     ``backend`` selects the lattice-engine statistics backend ("auto"
     dispatches: Pallas sausage kernels on TPU, levelized scan elsewhere).
@@ -106,19 +123,23 @@ class MMILoss:
         self.backend = backend
         self.mesh = mesh
 
-    def _parts(self, logits, lat: Lattice):
+    def _frames(self, lat: Lattice):
+        """Total real frame count (the loss-atom count S of Eq. 19)."""
+        return jnp.maximum(jnp.sum(lattice_frame_counts(lat)), 1.0)
+
+    def _parts(self, logits, lat: Lattice, accumulators: str = "full"):
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
-        num = self.kappa * jnp.take_along_axis(
-            lp, lat.ref_states[..., None], -1)[..., 0].sum(-1)      # (B,)
+        ref_lp = jnp.take_along_axis(
+            lp, lat.ref_states[..., None], -1)[..., 0]              # (B, T)
+        num = self.kappa * jnp.sum(ref_lp * lattice_frame_mask(lat), -1)
         stats = lattice_stats(lat, lp, self.kappa, backend=self.backend,
-                              mesh=self.mesh)
+                              mesh=self.mesh, accumulators=accumulators)
         return num, stats
 
-    def value(self, logits, batch):
+    def value(self, logits, batch, accumulators: str = "full"):
         lat: Lattice = batch["lattice"]
-        num, stats = self._parts(logits, lat)
-        B, T = logits.shape[0], logits.shape[1]
-        loss = -jnp.sum(num - stats.logZ) / (B * T)
+        num, stats = self._parts(logits, lat, accumulators)
+        loss = -jnp.sum(num - stats.logZ) / self._frames(lat)
         return loss, {"mmi": loss, "logZ": stats.logZ.mean()}
 
     def logit_grad(self, logits, batch):
@@ -133,16 +154,18 @@ class MMILoss:
         the *numerator* matching part plus the rank-1 denominator term
         derived from logit_grad (same structure as the MPE factor)."""
         lat: Lattice = batch["lattice"]
-        B, T = logits.shape[0], logits.shape[1]
-        w = self.kappa ** 2 / (B * T)
-        y = jax.nn.one_hot(lat.ref_states, logits.shape[-1], dtype=jnp.float32)
+        w = self.kappa ** 2 / self._frames(lat)
+        y = jax.nn.one_hot(lat.ref_states, logits.shape[-1],
+                           dtype=jnp.float32) \
+            * lattice_frame_mask(lat)[..., None]
         g = self.logit_grad(logits, batch)
         yu = jnp.sum(y * u, -1, keepdims=True)
         return w * (y * u) + self.kappa * g * yu
 
     def fisher_vp(self, logits, batch, u):
+        lat: Lattice = batch["lattice"]
         g = self.logit_grad(logits, batch)
-        S = logits.shape[0] * logits.shape[1]
+        S = self._frames(lat)
         gu = jnp.sum(g * u, -1, keepdims=True)
         return S * g * gu
 
@@ -163,11 +186,11 @@ class MPELoss:
         self.mesh = mesh
         self._mmi = MMILoss(kappa, backend=backend, mesh=mesh)
 
-    def value(self, logits, batch):
+    def value(self, logits, batch, accumulators: str = "full"):
         lat: Lattice = batch["lattice"]
         lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
         stats = lattice_stats(lat, lp, self.kappa, backend=self.backend,
-                              mesh=self.mesh)
+                              mesh=self.mesh, accumulators=accumulators)
         acc = stats.c_avg / jnp.maximum(lat.num_ref_units, 1.0)
         loss = -jnp.mean(acc)
         return loss, {"mpe_acc": jnp.mean(acc), "logZ": stats.logZ.mean()}
@@ -182,7 +205,12 @@ class MPELoss:
         lat: Lattice = batch["lattice"]
         B = logits.shape[0]
         w = (1.0 / (B * jnp.maximum(lat.num_ref_units, 1.0)))[:, None, None]
-        y = jax.nn.one_hot(lat.ref_states, logits.shape[-1], dtype=jnp.float32)
+        # mask edge-padded frames out of the matching term: the loss has
+        # zero dependence on them, so the curvature must not add PSD mass
+        # there (padding-dependent GN shifts the CG direction)
+        y = jax.nn.one_hot(lat.ref_states, logits.shape[-1],
+                           dtype=jnp.float32) \
+            * lattice_frame_mask(lat)[..., None]
         g = self.logit_grad(logits, batch)
         yu = jnp.sum(y * u, -1, keepdims=True)
         return (self.kappa ** 2) * w * (y * u) + self.kappa * g * yu

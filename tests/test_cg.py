@@ -83,6 +83,28 @@ def test_candidate_selection_picks_best():
     assert int(res.best_iter) == int(np.nanargmin(losses))
 
 
+def test_final_iterate_always_evaluated():
+    """Regression: with eval_every > 1 and (iters - 1) % eval_every != 0
+    the deepest candidate used to be silently skipped — the final iterate
+    must ALWAYS be evaluated and win when it is the best."""
+    n = 6
+    A = np.diag(np.linspace(1, 3, n)).astype(np.float32)
+    b = np.ones(n, np.float32)
+    res = cg_solve(lambda v: {"x": jnp.asarray(A) @ v["x"]},
+                   {"x": jnp.asarray(b)}, iters=4, eval_every=3,
+                   eval_fn=lambda x: -tm.norm(x))
+    losses = np.asarray(res.losses)
+    assert losses.shape == (4,)                   # history shape unchanged
+    assert np.isfinite(losses[0])                 # m=0: on the stride
+    assert np.isinf(losses[1]) and np.isinf(losses[2])   # strided out
+    assert np.isfinite(losses[3])                 # final iterate: evaluated
+    # and selection sees it: best == argmin over the evaluated candidates
+    assert int(res.best_iter) == int(np.nanargmin(
+        np.where(np.isfinite(losses), losses, np.nan)))
+    assert np.isclose(float(res.best_loss), np.nanmin(
+        np.where(np.isfinite(losses), losses, np.nan)), atol=1e-6)
+
+
 def test_quadratic_model_monotone(rng):
     """CG decreases the quadratic model monotonically on SPD systems."""
     n = 20

@@ -102,6 +102,24 @@ def test_grad_and_loss_matches_autodiff(tiny_problem):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
 
 
+def test_eval_loss_includes_aux(tiny_problem):
+    """Regression: eval_loss dropped the scaled auxiliary loss (e.g. MoE
+    router aux), so Alg. 1 candidate selection / reject_worse compared a
+    DIFFERENT objective than the ``loss + aux`` grad_and_loss minimises.
+    At Δθ = 0 the candidate objective must equal the training objective."""
+    params, batch, fwd0 = tiny_problem
+    fwd = lambda p, b: (fwd0(p, b)[0], jnp.float32(0.37))    # noqa: E731
+    loss = CELoss()
+    obj, _, _ = grad_and_loss(fwd, loss, params, batch)
+    ops = make_curvature_ops(fwd, loss, params, batch)
+    zero = jax.tree.map(jnp.zeros_like, params)
+    np.testing.assert_allclose(float(ops.eval_loss(zero)), float(obj),
+                               rtol=1e-6)
+    # and the aux really is in there (not cancelled to the plain loss)
+    plain = loss.value(fwd(params, batch)[0], batch)[0]
+    assert abs(float(ops.eval_loss(zero)) - float(plain) - 0.37) < 1e-6
+
+
 def test_fisher_psd(tiny_problem, key):
     """F = sum g g^T is PSD: v^T F v >= 0 for random v."""
     params, batch, fwd = tiny_problem

@@ -183,22 +183,102 @@ def test_arc_scores_long_T_regression():
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_padded_arcs_get_zero_cotangent(backend):
+@pytest.mark.parametrize("accumulators", ["full", "loss_only"])
+def test_padded_arcs_get_zero_cotangent(backend, accumulators):
     """Gradients through logZ/c_avg on a padded ragged batch must put
     EXACTLY zero cotangent on padded arc scores — naive exp(x - max) over
-    an all-masked row leaks softmax-style 1/W gradients into padding."""
+    an all-masked row leaks softmax-style 1/W gradients into padding.
+    Holds in both statistics modes (the fused Pallas loss-only path
+    differentiates lat.lm through its sausage gather)."""
     lat, lp = _padded_batch(0)
     pad = ~np.asarray(lat.arc_mask)
     assert pad.any()                                 # batch really is ragged
 
     def f(lm):
-        st = lattice_stats(lat._replace(lm=lm), lp, 1.0, backend=backend)
+        st = lattice_stats(lat._replace(lm=lm), lp, 1.0, backend=backend,
+                           accumulators=accumulators)
         return jnp.sum(st.logZ) + jnp.sum(st.c_avg)
 
     g = np.asarray(jax.grad(f)(lat.lm))
     assert np.isfinite(g).all()
     assert np.abs(g[pad]).max() == 0.0
     assert np.abs(g[~pad]).max() > 0.0               # real arcs still flow
+
+
+# ---------------------------------------------------------------------------
+# accumulators="loss_only" (the fused candidate-evaluation path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("padded", [False, True])
+def test_loss_only_matches_full_values(backend, padded):
+    """(logZ, c_avg) from the loss-only path == full statistics path, on
+    uniform and ragged/padded batches, for every backend."""
+    lat, lp = _padded_batch(11) if padded else _uniform_batch(11)
+    full = lattice_stats(lat, lp, kappa=0.8, backend=backend)
+    lo = lattice_stats(lat, lp, kappa=0.8, backend=backend,
+                       accumulators="loss_only")
+    assert not hasattr(lo, "gamma")     # really the reduced statistics set
+    for field in UTT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(lo, field)), np.asarray(getattr(full, field)),
+            atol=1e-4, err_msg=f"{backend}.{field} (padded={padded})")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("padded", [False, True])
+def test_loss_only_grad_and_jvp_match_full(backend, padded):
+    """jax.grad / jax.jvp through the loss-only path == the full path —
+    the fused Pallas custom_jvp must reproduce the occupancy tangents."""
+    lat, lp = _padded_batch(13) if padded else _uniform_batch(13)
+
+    def f(lp_, acc):
+        st = lattice_stats(lat, lp_, 0.8, backend=backend, accumulators=acc)
+        return jnp.sum(st.logZ) + jnp.sum(st.c_avg)
+
+    g_full = jax.grad(lambda l: f(l, "full"))(lp)
+    g_lo = jax.grad(lambda l: f(l, "loss_only"))(lp)
+    np.testing.assert_allclose(np.asarray(g_lo), np.asarray(g_full),
+                               atol=2e-5,
+                               err_msg=f"{backend} grad (padded={padded})")
+    d = jax.random.normal(jax.random.PRNGKey(23), lp.shape)
+    _, jv_full = jax.jvp(lambda l: f(l, "full"), (lp,), (d,))
+    _, jv_lo = jax.jvp(lambda l: f(l, "loss_only"), (lp,), (d,))
+    assert abs(float(jv_lo) - float(jv_full)) < 1e-4, (backend, padded)
+
+
+def test_loss_only_works_under_jit():
+    lat, lp = _uniform_batch(2)
+    want = np.asarray(lattice_stats(lat, lp, 1.0, backend="scan").logZ)
+    for b in BACKENDS:
+        got = jax.jit(lambda lp_, b=b: lattice_stats(
+            lat, lp_, 1.0, backend=b, accumulators="loss_only").logZ)(lp)
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-4, err_msg=b)
+
+
+def test_unknown_accumulators_rejected():
+    lat, lp = _uniform_batch(0)
+    with pytest.raises(ValueError):
+        lattice_stats(lat, lp, 1.0, accumulators="nope")
+
+
+def test_fused_loss_only_kernel_matches_ref():
+    """The fused candidate-eval kernel (in-kernel score construction +
+    arc->sausage gather + forward-only recursion) == its pure-jnp oracle,
+    on a ragged/padded batch (masked arcs + padded frontier slots), and
+    both == the scan backend's logZ/c_avg."""
+    lat, lp = _padded_batch(5)
+    args = (lp, lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+            lat.arc_mask, lat.level_arcs)
+    got = ops.sausage_loss_only(*args, kappa=0.8, use_pallas=True)
+    want = ref.sausage_loss_only_ref(*args, kappa=0.8)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4)
+    full = lattice_stats(lat, lp, 0.8, backend="scan")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(full.logZ),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(full.c_avg),
+                               atol=1e-4)
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])

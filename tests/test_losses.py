@@ -8,7 +8,8 @@ import pytest
 
 from repro.losses.forward_backward import (forward_backward,
                                            frame_state_occupancy)
-from repro.losses.lattice import make_lattice_batch
+from repro.losses.lattice import (batch_lattices, lattice_frame_counts,
+                                  make_lattice_batch, make_sausage_lattice)
 from repro.losses.sequence import CELoss, MMILoss, MPELoss
 
 B, T, K = 3, 24, 12
@@ -112,6 +113,52 @@ def test_mmi_gradient_is_occupancy_difference(lat, logits):
 def test_mpe_loss_bounded(lat, logits):
     loss, metrics = MPELoss().value(logits, {"lattice": lat})
     assert 0.0 <= float(metrics["mpe_acc"]) <= 1.0
+
+
+@pytest.mark.parametrize("loss_cls", [MMILoss, MPELoss])
+def test_loss_only_accumulators_match_full(lat, logits, loss_cls):
+    """value(..., accumulators="loss_only") — the CG candidate-eval fast
+    path — must equal the full-statistics value (and its gradient)."""
+    loss = loss_cls(kappa=0.8)
+    batch = {"lattice": lat}
+    v_full = loss.value(logits, batch)[0]
+    v_lo = loss.value(logits, batch, accumulators="loss_only")[0]
+    np.testing.assert_allclose(float(v_lo), float(v_full), atol=1e-6)
+    g_full = jax.grad(lambda lg: loss.value(lg, batch)[0])(logits)
+    g_lo = jax.grad(lambda lg: loss.value(
+        lg, batch, accumulators="loss_only")[0])(logits)
+    np.testing.assert_allclose(np.asarray(g_lo), np.asarray(g_full),
+                               atol=1e-6)
+
+
+def test_mmi_loss_padding_invariant():
+    """Regression: MMILoss normalised by B·num_frames and summed the
+    numerator over ALL frames, but make_sausage_lattice edge-pads
+    ref_states up to num_frames — so the loss value (and its scale, hence
+    the meaning of λ/damping) shifted with padding.  The same utterance
+    padded to a longer T must now give the SAME loss."""
+    K_ = 12
+    rng1, rng2 = np.random.default_rng(3), np.random.default_rng(3)
+    # seg_len=5: 5 segments cover 25 frames; the second lattice pads to 29
+    exact = make_sausage_lattice(rng1, num_frames=25, num_states=K_,
+                                 seg_len=5, n_alt=3)
+    padded = make_sausage_lattice(rng2, num_frames=29, num_states=K_,
+                                  seg_len=5, n_alt=3)
+    lat_e, lat_p = batch_lattices([exact]), batch_lattices([padded])
+    np.testing.assert_allclose(np.asarray(lattice_frame_counts(lat_e)), 25.0)
+    np.testing.assert_allclose(np.asarray(lattice_frame_counts(lat_p)), 25.0)
+    logits = jax.random.normal(jax.random.PRNGKey(7), (1, 29, K_))
+    loss = MMILoss(kappa=0.8)
+    v_exact = loss.value(logits[:, :25], {"lattice": lat_e})[0]
+    v_padded = loss.value(logits, {"lattice": lat_p})[0]
+    np.testing.assert_allclose(float(v_padded), float(v_exact), atol=1e-5)
+    # padded frames carry (at most ulp-level) gradient: the numerator mask
+    # zeroes them exactly; the mean-centred cumsum leaves fp residue only.
+    # (Pre-fix the numerator leak alone is O(kappa / (B*T)) ~ 3e-2.)
+    g = np.asarray(jax.grad(
+        lambda lg: loss.value(lg, {"lattice": lat_p})[0])(logits))
+    assert np.abs(g[:, 25:]).max() < 1e-6
+    assert np.abs(g[:, :25]).max() > 1e-4
 
 
 def test_ce_loss_metrics():

@@ -113,6 +113,33 @@ def test_reject_worse_guards_divergence(key):
         assert np.isfinite(np.asarray(a)).all()
 
 
+def test_fused_eval_path_selects_same_candidate(key):
+    """The loss-only fused candidate evaluation (eval_accumulators=
+    "loss_only", here on the Pallas backend so the fused kernel itself is
+    in the eval graph) must pick the SAME accepted candidate as the
+    full-statistics evaluation — the CG iterates are identical and the
+    two eval paths agree to float tolerance."""
+    cfg = CFG
+    params = acoustic.init_params(cfg, key)
+    gb, cb = _batches(cfg)
+    loss = MPELoss(kappa=0.5, backend="pallas")
+    outs = {}
+    for acc in ("full", "loss_only"):
+        socfg = SecondOrderConfig(method="nghf", cg_iters=3, ng_iters=1,
+                                  eval_accumulators=acc)
+        p, m = jax.jit(lambda pp, c=socfg: second_order_update(
+            _fwd(cfg), loss, c, pp, gb, cb))(params)
+        outs[acc] = (p, m)
+    m_full, m_lo = outs["full"][1], outs["loss_only"][1]
+    assert int(m_lo["cg_best_iter"]) == int(m_full["cg_best_iter"])
+    assert bool(m_lo["cg_accepted"]) == bool(m_full["cg_accepted"])
+    np.testing.assert_allclose(float(m_lo["cg_best_loss"]),
+                               float(m_full["cg_best_loss"]), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(outs["loss_only"][0]),
+                    jax.tree.leaves(outs["full"][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
 def test_bf16_state_mode_runs(key):
     cfg = CFG
     params = acoustic.init_params(cfg, key)
