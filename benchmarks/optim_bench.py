@@ -1,0 +1,100 @@
+"""Per-optimiser update wall-time through the unified ``core.optim`` API.
+
+Times ONE jitted update (post-compile) of each registered optimiser on
+the paper's workload — LSTM acoustic model + lattice MPE — through
+``launch.steps.build_sequence_step``, i.e. exactly what the training
+driver executes per step.  Second-order rows use the same gradient/CG
+batch geometry; ``nghf`` is measured both cold and with CG warm-starting
+(``warm_start`` costs one extra curvature product per update for the true
+residual — this row keeps that overhead visible across commits).
+
+Emits the standard CSV rows plus one JSON row per optimiser:
+
+    {"bench": "optim_update", "optimizer": "nghf", "warm_start": true,
+     "B": 32, "cg_B": 8, "T": 32, "ms_per_update": 123.4}
+
+``--json-out BENCH_lattice.json`` MERGES these rows into the existing
+lattice-engine trajectory file (same CI artifact), replacing any previous
+``optim_update`` rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks.common import emit, time_call
+from repro.configs.acoustic import LSTM
+from repro.launch.steps import build_sequence_step
+from repro.data.synthetic import asr_batch
+from repro.models import acoustic
+
+FRAMES = 32
+BATCH_GRAD = 32
+BATCH_CG = 8
+
+# (row label, optimizer spec name, config overrides)
+CONFIGS = [
+    ("sgd", "sgd", {"lr": 0.2}),
+    ("adam", "adam", {"lr": 2e-3}),
+    ("hf", "hf", {"cg_iters": 6}),
+    ("nghf", "nghf", {"cg_iters": 6, "ng_iters": 3}),
+    ("nghf_warm", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                           "warm_start": True}),
+]
+
+
+def run(budget: str = "small", json_out: str | None = None):
+    cfg = LSTM.smoke().replace(hidden_dim=48, num_outputs=30)
+    params = acoustic.init_params(cfg, jax.random.PRNGKey(0))
+    counts = acoustic.share_counts(cfg, params)
+    kw = dict(num_frames=FRAMES, num_states=cfg.num_outputs,
+              input_dim=cfg.input_dim, noise=1.2)
+    gb = asr_batch(0, batch=BATCH_GRAD, **kw)
+    cb = asr_batch(1, batch=BATCH_CG, **kw)
+
+    rows, json_rows = [], []
+    for label, name, overrides in CONFIGS:
+        step_fn, opt = build_sequence_step(cfg, name, loss="mpe",
+                                           share_counts=counts, **overrides)
+        step = jax.jit(step_fn)
+        state = opt.init(params)
+        cg = cb if opt.uses_cg_batch else None
+        # warm the state so the warm-start row times a REAL warm start
+        # (x0 != 0), not the first cold update
+        p, state, _ = step(params, state, gb, cg)
+        us = time_call(lambda: step(p, state, gb, cg), warmup=1, iters=3)
+        rows.append(emit(f"optim_update.{label}", us,
+                         f"ms_per_update={us / 1e3:.3f}"))
+        rec = {"bench": "optim_update", "optimizer": label,
+               "warm_start": bool(overrides.get("warm_start", False)),
+               "B": BATCH_GRAD, "cg_B": BATCH_CG, "T": FRAMES,
+               "ms_per_update": round(us / 1e3, 4)}
+        json_rows.append(rec)
+        print(json.dumps(rec))
+
+    if json_out:
+        # merge into the shared trajectory file (one CI artifact for both
+        # the lattice-engine and optimiser benches)
+        doc = {"bench": "lattice_engine", "budget": budget,
+               "device": jax.devices()[0].platform, "rows": []}
+        if os.path.exists(json_out):
+            with open(json_out) as f:
+                doc = json.load(f)
+        doc["rows"] = [r for r in doc.get("rows", [])
+                       if r.get("bench") != "optim_update"] + json_rows
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# merged {len(json_rows)} optim rows into {json_out}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small")
+    ap.add_argument("--json-out", default=None,
+                    help="merge JSON rows into e.g. BENCH_lattice.json")
+    args = ap.parse_args()
+    run(args.budget, json_out=args.json_out)

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows (one per measured artifact).
   lattice_engine_bench — per-backend statistics-stage timings (also emits
                         machine-readable JSON rows: backend, B/S/A,
                         ms_per_update)
+  optim_bench         — per-optimiser update wall time through the
+                        unified core.optim API (sgd/adam/hf/nghf, CG
+                        warm start on/off)
   roofline            — per (arch x shape x mesh) roofline terms from the
                         multi-pod dry-run artifacts (results/dryrun/)
 """
@@ -25,7 +28,7 @@ def main() -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
     from benchmarks import (cg_stability, kernel_bench, lattice_engine_bench,
-                            precond_ablation, table1_timing,
+                            optim_bench, precond_ablation, table1_timing,
                             table2_optimisers, table45_activations)
     table1_timing.run()
     table2_optimisers.run()
@@ -34,6 +37,7 @@ def main() -> None:
     precond_ablation.run()
     kernel_bench.run()
     lattice_engine_bench.run()
+    optim_bench.run()
 
     from benchmarks import roofline
     rows = roofline.load_all()

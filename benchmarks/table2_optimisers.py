@@ -19,9 +19,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.configs.acoustic import LSTM
-from repro.core.nghf import SecondOrderConfig, second_order_update
-from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
-                                   adam_update, sgd_init, sgd_update)
+from repro.core import optim
 from repro.data.synthetic import asr_batch
 from repro.losses.sequence import CELoss, MPELoss
 from repro.models import acoustic
@@ -48,11 +46,10 @@ def _pretrain_ce(params, steps=60):
     """Frame-level CE pretraining (the paper's starting point).  Adam is
     used here purely to build a competent CE baseline quickly; the paper's
     comparison starts FROM the CE model."""
-    ce = CELoss()
     fwd = lambda p, b: (acoustic.forward(CFG, p, b["feats"]), 0.0)  # noqa
-    opt = AdamConfig(lr=3e-3)
-    state = adam_init(params, opt)
-    step = jax.jit(lambda p, s, b: adam_update(fwd, ce, opt, p, b, s))
+    opt = optim.get_optimizer("adam", fwd, CELoss(), lr=3e-3)
+    state = opt.init(params)
+    step = jax.jit(opt.step)
     for i in range(steps):
         params, state, _ = step(params, state, _batch(1000 + i))
     return params
@@ -84,20 +81,21 @@ def run(budget: str = "small"):
 
     for method in ("ng", "hf", "nghf"):
         params = base
-        socfg = SecondOrderConfig(method=method, cg_iters=6, ng_iters=3)
         lam = {"ng": 10.0, "hf": 1.0, "nghf": 10.0}[method]
-        upd = jax.jit(lambda p, gb, cb, m=method, l=lam: second_order_update(
-            _fwd(CFG), LOSS, SecondOrderConfig(method=m, cg_iters=6,
-                                               ng_iters=3, lam=l),
-            p, gb, cb, share_counts=counts))
+        opt = optim.get_optimizer(method, _fwd(CFG), LOSS,
+                                  share_counts=counts, cg_iters=6,
+                                  ng_iters=3, lam=lam)
+        state = opt.init(params)
+        upd = jax.jit(opt.step)
         curve = []
         us = None
         for u in range(n_second_order):
             gb = _batch(u, batch=BATCH_GRAD)
             cb = _batch(10_000 + u, batch=BATCH_CG)
             if us is None:
-                us = time_call(lambda: upd(params, gb, cb), warmup=1, iters=1)
-            params, m = upd(params, gb, cb)
+                us = time_call(lambda: upd(params, state, gb, cb),
+                               warmup=1, iters=1)
+            params, state, m = upd(params, state, gb, cb)
             curve.append(float(m["mpe_acc"]))
         curves[method] = curve
         acc, fer = _eval_heldout(params)
@@ -105,13 +103,11 @@ def run(budget: str = "small"):
                          f"acc={acc:.4f};fer={fer:.4f};"
                          f"updates={n_second_order}"))
 
-    for name, mk in (("sgd", lambda: (SGDConfig(lr=0.2), sgd_init, sgd_update)),
-                     ("adam", lambda: (AdamConfig(lr=2e-3), adam_init,
-                                       adam_update))):
-        opt, init, update = mk()
+    for name, lr in (("sgd", 0.2), ("adam", 2e-3)):
+        opt = optim.get_optimizer(name, _fwd(CFG), LOSS, lr=lr)
         params = base
-        state = init(params, opt)
-        step = jax.jit(lambda p, s, b: update(_fwd(CFG), LOSS, opt, p, b, s))
+        state = opt.init(params)
+        step = jax.jit(opt.step)
         curve = []
         us = None
         for u in range(n_first_order):

@@ -14,8 +14,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.acoustic import (RNN_RELU, RNN_SIGMOID, TDNN_RELU,
                                     TDNN_SIGMOID)
-from repro.core.nghf import SecondOrderConfig, second_order_update
-from repro.core.optimizers import AdamConfig, adam_init, adam_update
+from repro.core import optim
 from repro.data.synthetic import asr_batch
 from repro.losses.sequence import CELoss, MPELoss
 from repro.models import acoustic
@@ -37,9 +36,9 @@ def _batch(cfg, seed, batch=32):
 
 
 def _pretrain(cfg, fwd, params, steps=60):
-    opt = AdamConfig(lr=3e-3)
-    state = adam_init(params, opt)
-    step = jax.jit(lambda p, s, b: adam_update(fwd, CELoss(), opt, p, b, s))
+    opt = optim.get_optimizer("adam", fwd, CELoss(), lr=3e-3)
+    state = opt.init(params)
+    step = jax.jit(opt.step)
     for i in range(steps):
         params, state, _ = step(params, state, _batch(cfg, 1000 + i, 16))
     return params
@@ -69,13 +68,14 @@ def run(budget: str = "small"):
         for method in ("ng", "hf", "nghf"):
             params = base
             lam = 10.0 if method in ("ng", "nghf") else 1.0
-            so = SecondOrderConfig(method=method, cg_iters=5, ng_iters=2,
-                                   lam=lam)
-            upd = jax.jit(lambda p, gb, cb, s=so: second_order_update(
-                fwd, LOSS, s, p, gb, cb, share_counts=counts))
+            opt = optim.get_optimizer(method, fwd, LOSS,
+                                      share_counts=counts, cg_iters=5,
+                                      ng_iters=2, lam=lam)
+            state = opt.init(params)
+            upd = jax.jit(opt.step)
             for u in range(n_updates):
-                params, m = upd(params, _batch(cfg, u, 48),
-                                _batch(cfg, 10_000 + u, 8))
+                params, state, m = upd(params, state, _batch(cfg, u, 48),
+                                       _batch(cfg, 10_000 + u, 8))
             acc = _eval(cfg, params)
             rows.append(emit(f"table45.{name}.{method}", 0.0,
                              f"ce_acc={base_acc:.4f};mpe_acc={acc:.4f};"

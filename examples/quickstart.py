@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core.nghf import SecondOrderConfig, second_order_update
+from repro.core import optim
 from repro.data.synthetic import lm_batch
 from repro.losses.chunked_lm import ChunkedCELoss
 from repro.models.registry import get_model
@@ -32,10 +32,13 @@ def main():
         return (hidden, model.head_matrix(p)), cfg.router_aux_coef * aux
 
     # 3. one NGHF update = gradient accumulation + Fisher-CG + GN-CG with
-    #    candidate selection (paper Fig. 1), all inside one jit.
-    socfg = SecondOrderConfig(method="nghf", cg_iters=4, ng_iters=2, lam=1.0)
-    update = jax.jit(lambda p, gb, cb: second_order_update(
-        fwd, loss, socfg, p, gb, cb))
+    #    candidate selection (paper Fig. 1), all inside one jit.  Every
+    #    optimiser ("sgd" | "adam" | "ng" | "hf" | "nghf") exposes the same
+    #    stateful protocol: init once, then step.
+    opt = optim.get_optimizer("nghf", fwd, loss, cg_iters=4, ng_iters=2,
+                              lam=1.0)
+    opt_state = opt.init(params)
+    update = jax.jit(opt.step)
 
     for step in range(10):
         gb = lm_batch(step, batch=32, seq_len=64, vocab=cfg.vocab_size)
@@ -45,7 +48,7 @@ def main():
         # acceptance guard rejects everything — the production train step
         # in launch/steps.py uses the same slice strategy.)
         cb = jax.tree.map(lambda x: x[:8], gb)
-        params, metrics = update(params, gb, cb)
+        params, opt_state, metrics = update(params, opt_state, gb, cb)
         print(f"step {step}: ce={float(metrics['ce']):.4f} "
               f"acc={float(metrics['acc']):.3f} "
               f"cg_best_iter={int(metrics['cg_best_iter'])} "

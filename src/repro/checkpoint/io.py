@@ -4,6 +4,13 @@ Checkpoints are a directory containing ``arrays.npz`` (leaves keyed by
 flattened path) plus ``manifest.json`` (tree structure, step metadata).
 Works for params, optimiser state, and NGHF CG diagnostics alike.  Restore
 optionally re-shards against a target sharding tree.
+
+``save_train_state``/``load_train_state`` are the training drivers' path:
+they persist the FULL ``(params, opt_state, step)`` triple — a killed run
+resumed from one of these checkpoints is indistinguishable from an
+uninterrupted run (momentum, Adam moments, λ, warm-start Δθ and
+preconditioner statistics all survive).  ``load_train_state`` also reads
+legacy params-only checkpoints (the optimiser state then starts fresh).
 """
 from __future__ import annotations
 
@@ -80,3 +87,46 @@ def load_checkpoint(ckpt_dir: str, like, *, shardings=None):
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree, manifest["step"]
+
+
+TRAIN_STATE_FORMAT = "train-state-v1"
+
+
+def save_train_state(ckpt_dir: str, params, opt_state, *, step: int = 0,
+                     extra: Optional[dict] = None):
+    """Atomic save of the full training state (params + optimiser state)."""
+    meta = dict(extra or {}, format=TRAIN_STATE_FORMAT)
+    save_checkpoint(ckpt_dir, {"params": params, "opt_state": opt_state},
+                    step=step, extra=meta)
+
+
+def load_train_state(ckpt_dir: str, params_like, opt_state_like, *,
+                     shardings=None):
+    """Restore ``(params, opt_state, step)``.
+
+    ``shardings``: optional NamedSharding tree matching ``params_like``
+    only — optimiser state is placed by the caller (``opt.init`` already
+    built ``opt_state_like`` on its target shardings, and loaded leaves
+    re-placed with ``device_put`` below inherit from it being donated into
+    the jitted step).  Legacy params-only checkpoints restore params and
+    return ``opt_state_like`` untouched (fresh optimiser state).
+    """
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("extra", {}).get("format") != TRAIN_STATE_FORMAT:
+        params, step = load_checkpoint(ckpt_dir, params_like,
+                                       shardings=shardings)
+        return params, opt_state_like, step
+    try:
+        tree, step = load_checkpoint(
+            ckpt_dir, {"params": params_like, "opt_state": opt_state_like})
+    except ValueError as e:
+        raise ValueError(
+            f"checkpoint at {ckpt_dir!r} does not match the current "
+            "training state structure — was it saved with different "
+            "optimiser flags (--optimizer / --warm-start / "
+            f"--preconditioner)? ({e})") from e
+    params = tree["params"]
+    if shardings is not None:
+        params = jax.tree.map(jax.device_put, params, shardings)
+    return params, tree["opt_state"], step

@@ -19,11 +19,14 @@ Three paper-specific features on top of textbook CG:
      intermediate iterates are skipped, but the FINAL iterate is always
      evaluated — the deepest candidate must never be silently excluded
      from selection.
-  2. **Shared-parameter preconditioning** (Sec. 4.3) — diagonal PCG with
-     M⁻¹ = diag(1/c), c = per-leaf share counts: equivalently plain CG in
-     the √c-rescaled variable space, i.e. residuals/directional derivatives
-     are normalised by the number of times a parameter is applied, so
-     heavily-shared weights stop dominating ‖r‖ and ‖Bv‖.
+  2. **Pluggable preconditioning** — diagonal PCG behind the
+     ``core.optim.preconditioners`` protocol.  ``precond`` is an
+     M⁻¹-apply callable (r -> M⁻¹ r); a per-leaf count tree is still
+     accepted and means the paper's Sec. 4.3 shared-parameter scaling
+     M⁻¹ = diag(1/c): equivalently plain CG in the √c-rescaled variable
+     space, i.e. residuals/directional derivatives are normalised by the
+     number of times a parameter is applied, so heavily-shared weights
+     stop dominating ‖r‖ and ‖Bv‖.
   3. **Negative-curvature guard** — if vᵀBv ≤ 0 (possible for the MBR GN
      matrix, Sec. 3.2, or from fp error without the Sec. 4.2 rescaling)
      the iteration freezes and the best candidate so far is kept.
@@ -52,30 +55,41 @@ class CGResult(NamedTuple):
 
 
 def cg_solve(bv_fn: Callable, b, *, iters: int,
-             precond: Optional[dict] = None,
+             precond=None,
              eval_fn: Optional[Callable] = None,
              damping: float = 0.0,
              eval_every: int = 1,
-             constrain: Optional[Callable] = None) -> CGResult:
+             constrain: Optional[Callable] = None,
+             x0=None) -> CGResult:
     """Run ``iters`` CG iterations on B x = b.
 
     bv_fn:    v -> B v (θ-sized pytree in/out).
     b:        right-hand side (e.g. -∇L, or the NG direction for NGHF).
-    precond:  per-leaf share counts c (M = diag(c)); None => identity.
+    precond:  the M⁻¹ apply — None => identity; a callable r -> M⁻¹ r
+              (``core.optim.preconditioners``); or a legacy per-leaf
+              share-count tree c meaning M = diag(c) (Sec. 4.3).
     eval_fn:  Δθ -> scalar CG-batch loss for candidate selection.
     damping:  Tikhonov η (B + ηI) — the baseline the paper improves on.
     constrain: optional θ-tree -> θ-tree sharding constraint applied to
               every loop-carried vector each iteration.  Without it GSPMD's
               while-loop fixpoint can settle the carries on REPLICATED
               (measured: 7 full-size f32 vectors/dev on qwen2.5-3b).
+    x0:       optional warm-start iterate (e.g. the previous update's Δθ,
+              ``SecondOrderConfig.warm_start``).  Costs ONE extra B
+              product to form the true residual b - B x0; None keeps the
+              historical cold start from 0 exactly (no extra product).
     """
     if constrain is None:
         constrain = lambda t: t          # noqa: E731
 
-    def Minv(t):
-        if precond is None:
-            return t
-        return jax.tree.map(lambda x, c: x / jnp.asarray(c, x.dtype), t, precond)
+    if precond is None:
+        Minv = lambda t: t               # noqa: E731
+    elif callable(precond):
+        Minv = precond
+    else:                                # legacy per-leaf count tree
+        counts = precond
+        Minv = lambda t: jax.tree.map(                      # noqa: E731
+            lambda x, c: x / jnp.asarray(c, x.dtype), t, counts)
 
     def B(v):
         out = bv_fn(v)
@@ -83,8 +97,13 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
             out = tm.axpy(damping, v, out)
         return out
 
-    x0 = tm.zeros_like(b)
-    r0 = b                       # residual of x=0
+    warm = x0 is not None
+    if not warm:
+        x0 = tm.zeros_like(b)
+        r0 = b                   # residual of x=0
+    else:
+        x0 = constrain(x0)
+        r0 = constrain(tm.sub(b, B(x0)))
     z0 = Minv(r0)
     v0 = z0
     rz0 = tm.vdot(r0, z0)
@@ -130,12 +149,18 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
     (x, r, z, v, rz, best_x, best_loss, best_iter, dead), hist = \
         jax.lax.scan(body, init, jnp.arange(iters))
     quad, resid, curv, losses = hist
+    # a warm-started solve frozen by the negative-curvature guard at
+    # iteration 0 never left x0 — the PREVIOUS system's solution, not a
+    # candidate for this one.  The unevaluated fallbacks below must return
+    # Δθ=0 (the historical cold-start behaviour), never re-apply it.
+    stale = (curv[0] <= 0.0) if warm else jnp.asarray(False)
+    last = tm.where(stale, tm.zeros_like(x), x) if warm else x
     if eval_fn is None:
-        best_x, best_iter = x, jnp.asarray(iters - 1, jnp.int32)
+        best_x, best_iter = last, jnp.asarray(iters - 1, jnp.int32)
     else:
         # if nothing evaluated better than inf (e.g. all bad), fall back
         none_found = ~jnp.isfinite(best_loss)
-        best_x = tm.where(none_found, x, best_x)
+        best_x = tm.where(none_found, last, best_x)
         best_iter = jnp.where(none_found, iters - 1, best_iter)
     return CGResult(x=best_x, best_loss=best_loss, best_iter=best_iter,
                     quad=quad, resid=resid, curv=curv, losses=losses)

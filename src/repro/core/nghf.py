@@ -1,177 +1,36 @@
-"""The two-stage distributed second-order update (paper Secs. 4-6).
+"""Thin compatibility shims over ``repro.core.optim``.
 
-One **update** = gradient-accumulation stage (large gradient batch) + CG
-stage (small CG batch), exactly Fig. 1:
-
-  NG   (Sec. 5):  solve   λ F Δθ = -∇L          with CG on Fisher products
-  HF   (Sec. 3):  solve     G Δθ = -∇L          with CG on GN products
-  NGHF (Sec. 6):  solve     G Δθ = -F⁻¹∇L       — the outer CG is
-                  *initialised with the NG direction* as its RHS, so the
-                  returned update is a weighted combination of the NG
-                  direction and GN-conjugate directions (Eqn. 22).
-
-Everything happens inside ONE jitted function: under pjit the gradient
-batch / CG batch means become GSPMD all-reduces across the (pod, data)
-mesh axes — the master/worker accumulation of the paper at pod scale.
+The two-stage NG/HF/NGHF update now lives in
+``repro.core.optim.second_order.SecondOrderOptimizer`` — a *stateful*
+optimiser on the unified protocol (warm-started CG, adaptive λ, pluggable
+preconditioners).  This module keeps the historical stateless entry
+points as one-call shims so papers-era scripts and the regression tests
+keep working; new code should use ``optim.get_optimizer``.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
+from repro.core.optim.second_order import (SecondOrderConfig,
+                                           SecondOrderOptimizer)
 
-from repro.core import tree_math as tm
-from repro.core.cg import cg_solve
-from repro.core.curvature import grad_and_loss, make_curvature_ops
+__all__ = ["SecondOrderConfig", "second_order_update", "make_update_fn"]
 
 
-@dataclass(frozen=True)
-class SecondOrderConfig:
-    method: str = "nghf"          # ng | hf | nghf
-    cg_iters: int = 8             # outer CG iterations (paper: 5-8)
-    ng_iters: int = 4             # inner Fisher-CG iterations for NGHF
-    lam: float = 1.0              # λ, KL trust multiplier on F (Eqn. 17)
-    damping: float = 0.0          # Tikhonov η (baseline; paper avoids it)
-    ng_damping: float = 1.0       # inner-Fisher-solve damping for NGHF: the
-                                  # empirical Fisher is rank-deficient, so an
-                                  # undamped 3-4 iteration CG inversion blows
-                                  # up along near-null directions (|d| 130x
-                                  # |g| measured) and every outer candidate
-                                  # loses to Δθ=0.  Same role as TRPO's CG
-                                  # damping; the mean-normalised F makes 1.0
-                                  # a stable default.
-    stabilize: bool = True        # Sec. 4.2 ‖θ‖/‖v‖ rescaling
-    precondition: bool = True     # Sec. 4.3 shared-parameter scaling
-    eval_candidates: bool = True  # Alg. 1 candidate selection
-    reject_worse: bool = True     # keep θ when no candidate beats Δθ=0
-    eval_every: int = 1           # candidate-eval stride (the final CG
-                                  # iterate is always evaluated)
-    eval_accumulators: str = "loss_only"
-                                  # statistics mode for the per-CG-iteration
-                                  # candidate evaluation (Alg. 1 — ~73 % of
-                                  # CG wall time in paper Table 1):
-                                  # "loss_only" computes just (logZ, c_avg)
-                                  # — no backward recursion; one fused
-                                  # forward kernel on the Pallas backend —
-                                  # while the gradient/curvature stages
-                                  # keep full statistics.  "full" restores
-                                  # the complete FBStats evaluation.
-    step_scale: float = 1.0       # trust-region style final scaling
-    curvature_mode: str = "rematvp"   # rematvp | linearize (see curvature.py)
-    grad_microbatches: int = 1        # sequential grad accumulation (memory)
-    state_dtype: str = "float32"      # CG vector storage; "bfloat16" halves
-                                      # θ-state memory (the Sec. 4.2 rescaling
-                                      # is what keeps bf16 products usable)
-
-    def replace(self, **kw):
-        return dataclasses.replace(self, **kw)
-
-
-def second_order_update(forward_fn: Callable, loss_spec, cfg: SecondOrderConfig,
-                        params, grad_batch, cg_batch,
+def second_order_update(forward_fn: Callable, loss_spec,
+                        cfg: SecondOrderConfig, params, grad_batch, cg_batch,
                         share_counts: Optional[dict] = None,
                         state_sharding=None):
-    """Compute one NG/HF/NGHF update.
-
-    forward_fn(params, batch) -> (logits, aux).
-    state_sharding: optional tree of NamedSharding matching params — the
-    θ-sized CG state (grads, r, v, Δθ, Bv) is constrained to it so second-
-    order state inherits the 2d STORAGE sharding rather than the 1d compute
-    sharding the vjp cotangents carry (6 GiB/dev difference on qwen2.5-3b).
-    Returns (new_params, metrics) with rich CG diagnostics.
-    """
-    def _c0(t):
-        if state_sharding is None:
-            return t
-        return jax.tree.map(jax.lax.with_sharding_constraint, t,
-                            state_sharding)
-
-    # --- stage 1: gradient accumulation (Fig. 1, left) ---------------------
-    loss, metrics, grads = grad_and_loss(
-        forward_fn, loss_spec, params, grad_batch,
-        microbatches=cfg.grad_microbatches, constrain=_c0)
-    grads = _c0(grads)
-    b = tm.scale(grads, -1.0)
-    if cfg.state_dtype != "float32":
-        b = jax.tree.map(lambda x: x.astype(cfg.state_dtype), b)
-
-    # --- stage 2: CG (Fig. 1, right) ---------------------------------------
-    theta_norm = tm.norm(params)
-    ops = make_curvature_ops(forward_fn, loss_spec, params, cg_batch,
-                             stabilize=cfg.stabilize, theta_norm=theta_norm,
-                             mode=cfg.curvature_mode,
-                             eval_accumulators=cfg.eval_accumulators)
-    precond = share_counts if (cfg.precondition and share_counts is not None) \
-        else None
-
-    def _c(t):
-        """Constrain a θ-sized vector to the storage sharding (see above)."""
-        if state_sharding is None:
-            return t
-        return jax.tree.map(jax.lax.with_sharding_constraint, t, state_sharding)
-
-    def _st(t):
-        """Match the CG state storage dtype (bf16 state keeps scan carries
-        homogeneous; reductions inside tm.* stay f32)."""
-        if cfg.state_dtype == "float32":
-            return t
-        return jax.tree.map(lambda x: x.astype(cfg.state_dtype), t)
-
-    fvp = lambda v: _st(_c(tm.scale(ops.fvp(v), cfg.lam)))     # noqa: E731
-    gnvp = lambda v: _st(_c(ops.gnvp(v)))                      # noqa: E731
-    constrain = _c if state_sharding is not None else None
-
-    diag = {}
-    if cfg.method == "ng":
-        res = cg_solve(fvp, b,
-                       iters=cfg.cg_iters, precond=precond,
-                       eval_fn=ops.eval_loss if cfg.eval_candidates else None,
-                       damping=cfg.damping, eval_every=cfg.eval_every,
-                       constrain=constrain)
-    elif cfg.method == "hf":
-        res = cg_solve(gnvp, b,
-                       iters=cfg.cg_iters, precond=precond,
-                       eval_fn=ops.eval_loss if cfg.eval_candidates else None,
-                       damping=cfg.damping, eval_every=cfg.eval_every,
-                       constrain=constrain)
-    elif cfg.method == "nghf":
-        # inner solve: (λF + ηI) d = -∇L  (NG direction, no candidate
-        # eval — it only forms the RHS of the regulated problem, Eqn. 20/21)
-        inner = cg_solve(fvp, b,
-                         iters=cfg.ng_iters, precond=precond,
-                         eval_fn=None,
-                         damping=max(cfg.damping, cfg.ng_damping),
-                         constrain=constrain)
-        ng_dir = inner.x
-        diag["ng_quad"] = inner.quad
-        # outer solve: G Δθ = NG direction  (Sec. 6.2)
-        res = cg_solve(gnvp, ng_dir,
-                       iters=cfg.cg_iters, precond=precond,
-                       eval_fn=ops.eval_loss if cfg.eval_candidates else None,
-                       damping=cfg.damping, eval_every=cfg.eval_every,
-                       constrain=constrain)
-    else:
-        raise ValueError(cfg.method)
-
-    delta = tm.scale(res.x, cfg.step_scale)
-    accepted = jnp.asarray(True)
-    if cfg.eval_candidates and cfg.reject_worse:
-        # Alg. 1 returns the best candidate by CG-batch loss; additionally
-        # reject it if it does not beat the zero update (guards the first
-        # few updates where the quadratic model is untrustworthy).
-        base = ops.eval_loss(tm.zeros_like(res.x))
-        accepted = res.best_loss < base
-        delta = tm.where(accepted, delta, tm.zeros_like(delta))
-    new_params = tm.add(params, tm.cast_like(delta, params))
-    metrics = dict(metrics)
-    metrics.update(
-        loss=loss, grad_norm=tm.norm(grads), update_norm=tm.norm(delta),
-        cg_best_iter=res.best_iter, cg_best_loss=res.best_loss,
-        cg_quad=res.quad, cg_resid=res.resid, cg_curv=res.curv,
-        cg_losses=res.losses, cg_accepted=accepted, **diag)
+    """One stateless NG/HF/NGHF update: builds a fresh optimiser state,
+    runs ``SecondOrderOptimizer.step`` once and drops the state.  Returns
+    (new_params, metrics) exactly as before.  Stateful features
+    (warm_start, adapt_lam, fisher_diag) need the stateful API — their
+    state would be discarded here every call."""
+    opt = SecondOrderOptimizer(cfg, forward_fn, loss_spec,
+                               share_counts=share_counts,
+                               state_sharding=state_sharding)
+    new_params, _, metrics = opt.step(params, opt.init(params),
+                                      grad_batch, cg_batch)
     return new_params, metrics
 
 

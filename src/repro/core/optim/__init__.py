@@ -1,0 +1,38 @@
+"""`repro.core.optim` — one stateful optimiser API for the whole repo.
+
+    from repro.core import optim
+
+    opt   = optim.get_optimizer("nghf", forward_fn, loss_spec,
+                                cg_iters=8, warm_start=True)
+    state = opt.init(params)
+    params, state, metrics = opt.step(params, state, grad_batch, cg_batch)
+
+Registry names: "sgd", "adam" (first-order, ignore ``cg_batch``) and
+"ng", "hf", "nghf" (two-stage second-order, require it).  See
+``base.Optimizer`` for the protocol and the documented state contents,
+``second_order.SecondOrderConfig`` for warm-start / λ-adaptation /
+preconditioner flags, and ``preconditioners`` for the CG preconditioner
+protocol (identity | share_counts | fisher_diag).
+"""
+from repro.core.optim.base import (OPTIMIZERS, Optimizer, config_for,
+                                   get_optimizer, list_optimizers,
+                                   register_optimizer)
+from repro.core.optim.first_order import SGD, Adam, AdamConfig, SGDConfig
+from repro.core.optim.preconditioners import (PRECONDITIONERS,
+                                              FisherDiagPreconditioner,
+                                              IdentityPreconditioner,
+                                              Preconditioner,
+                                              ShareCountsPreconditioner,
+                                              get_preconditioner)
+from repro.core.optim.second_order import (SecondOrderConfig,
+                                           SecondOrderOptimizer)
+
+__all__ = [
+    "OPTIMIZERS", "Optimizer", "config_for", "get_optimizer",
+    "list_optimizers", "register_optimizer",
+    "SGD", "Adam", "AdamConfig", "SGDConfig",
+    "PRECONDITIONERS", "Preconditioner", "IdentityPreconditioner",
+    "ShareCountsPreconditioner", "FisherDiagPreconditioner",
+    "get_preconditioner",
+    "SecondOrderConfig", "SecondOrderOptimizer",
+]

@@ -1,0 +1,172 @@
+"""The unified stateful optimiser protocol (paper Fig. 1 as ONE interface).
+
+The paper frames NGHF as a *framework* in which NG, HF, SGD and Adam are
+interchangeable optimisers over the same two-stage distributed update.
+This module is that frame in code: every optimiser — first- or second-
+order — is a stateful object with the same three-call surface,
+
+    opt    = get_optimizer(name, forward_fn, loss_spec, **overrides)
+    state  = opt.init(params)                       # pure pytree
+    params, state, metrics = opt.step(params, state, grad_batch,
+                                      cg_batch=None)
+
+so the drivers (``launch.train``), the step builders (``launch.steps``),
+checkpointing (``checkpoint.io.save_train_state``) and the benchmarks
+contain NO per-optimiser branching.  ``state`` is an ordinary pytree of
+arrays: it jits, shards (``state_shardings`` mirrors a parameter sharding
+tree onto the state structure) and checkpoints exactly like ``params``.
+
+State contents are part of the documented API (see README "Optimisers"):
+
+  sgd   : {"mom": θ-like momentum, "step": int32 update counter — drives
+           the optional ``decay`` learning-rate schedule}
+  adam  : {"m": θ-like, "v": θ-like, "step": int32 (bias correction)}
+  ng/hf/nghf : {"step": int32, "lam": f32 λ (live iff ``adapt_lam``),
+                "precond": preconditioner state ({} unless fisher_diag),
+                "delta": θ-like previous Δθ (present iff ``warm_start``)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Optimizer:
+    """Protocol base.  Subclasses bind (config, forward_fn, loss_spec) at
+    construction and implement ``state_template``/``step``."""
+
+    name: str = "?"
+    uses_cg_batch: bool = False   # second-order optimisers consume an
+                                  # explicit CG batch (paper Sec. 4.1)
+
+    # -- state construction --------------------------------------------------
+    def state_template(self, theta: Callable, scalar: Callable) -> Dict:
+        """Build the state STRUCTURE once; ``init`` and ``state_shardings``
+        are both derived from it, so structure, dtypes and sharding cannot
+        drift.
+
+        theta(cast=None) -> a θ-shaped tree (zeros for init, the parameter
+                            sharding tree for state_shardings).  ``cast``
+                            optionally maps a param leaf to the slot's
+                            storage dtype (e.g. bf16 warm-start Δθ, f32
+                            Fisher diagonal); init honours it, sharding
+                            derivation ignores it.
+        scalar(dt, v0)   -> a 0-d slot of dtype ``dt`` initialised to
+                            ``v0`` (or its sharding)
+        """
+        raise NotImplementedError
+
+    def init(self, params, state_sharding=None):
+        """Fresh optimiser state for ``params``.  ``state_sharding`` (a
+        pytree of NamedSharding matching params) places θ-like state leaves
+        on the parameter sharding and scalars replicated."""
+
+        def theta(cast=None):
+            return jax.tree.map(
+                lambda p: jnp.zeros(p.shape, cast(p) if cast else p.dtype),
+                params)
+
+        state = self.state_template(theta, lambda dt, v0: jnp.asarray(v0, dt))
+        if state_sharding is not None:
+            shards = self.state_shardings(state_sharding)
+            if shards is not None:
+                state = jax.tree.map(jax.device_put, state, shards)
+        return state
+
+    def state_shardings(self, param_shardings, scalar_sharding=None):
+        """Sharding tree matching ``init``'s structure: θ-like leaves take
+        the corresponding parameter sharding, scalars ``scalar_sharding``
+        (fully-replicated on the same mesh when omitted)."""
+        if scalar_sharding is None:
+            named = [s for s in jax.tree.leaves(
+                param_shardings,
+                is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+                if isinstance(s, NamedSharding)]
+            if not named:
+                return None
+            scalar_sharding = NamedSharding(named[0].mesh, P())
+        return self.state_template(lambda cast=None: param_shardings,
+                                   lambda dt, v0: scalar_sharding)
+
+    # -- the update ----------------------------------------------------------
+    def step(self, params, state, grad_batch, cg_batch=None):
+        """One update: (params, state, metrics).  First-order optimisers
+        ignore ``cg_batch``; second-order ones require it."""
+        raise NotImplementedError
+
+
+class OptimizerSpec(NamedTuple):
+    config_cls: type
+    defaults: Dict[str, Any]          # injected by config_for (e.g.
+                                      # {"method": "nghf"})
+    factory: Callable                 # (cfg, forward_fn, loss_spec,
+                                      #  share_counts=, state_sharding=)
+
+
+OPTIMIZERS: Dict[str, OptimizerSpec] = {}
+
+
+def register_optimizer(name: str, config_cls, factory, **defaults):
+    OPTIMIZERS[name] = OptimizerSpec(config_cls, defaults, factory)
+
+
+def list_optimizers():
+    return sorted(OPTIMIZERS)
+
+
+def config_for(name: str, **kw):
+    """Build ``name``'s config dataclass from CLI-style kwargs.  Keys the
+    config does not declare — and None values — are dropped, so one
+    uniform call site serves every optimiser (no driver branching)."""
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name!r} "
+                         f"(have {list_optimizers()})")
+    spec = OPTIMIZERS[name]
+    fields = {f.name for f in dataclasses.fields(spec.config_cls)}
+    clean = dict(spec.defaults)
+    clean.update({k: v for k, v in kw.items()
+                  if k in fields and v is not None})
+    return spec.config_cls(**clean)
+
+
+def _name_of_config(cfg) -> str:
+    method = getattr(cfg, "method", None)
+    if method is not None and method in OPTIMIZERS:
+        return method
+    for name, spec in OPTIMIZERS.items():
+        if type(cfg) is spec.config_cls and not spec.defaults:
+            return name
+    raise ValueError(f"no registered optimizer for config {type(cfg)}")
+
+
+def get_optimizer(spec, forward_fn, loss_spec, *,
+                  share_counts: Optional[dict] = None,
+                  state_sharding=None, **overrides) -> Optimizer:
+    """The one constructor: ``spec`` is a registry name ("sgd" | "adam" |
+    "ng" | "hf" | "nghf" | anything registered) or an already-built config
+    dataclass.  ``share_counts`` feeds the Sec. 4.3 preconditioner (second-
+    order only); ``state_sharding`` pins θ-sized optimiser state."""
+    if isinstance(spec, str):
+        if spec not in OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {spec!r} "
+                             f"(have {list_optimizers()})")
+        fields = {f.name for f in
+                  dataclasses.fields(OPTIMIZERS[spec].config_cls)}
+        unknown = {k for k, v in overrides.items()
+                   if k not in fields and v is not None}
+        if unknown:
+            # config_for's silent filtering is for the uniform driver call
+            # site; explicit constructor kwargs must not typo away
+            raise TypeError(f"unknown {spec} option(s): {sorted(unknown)}")
+        cfg = config_for(spec, **overrides)
+        name = spec
+    else:
+        cfg = dataclasses.replace(spec, **overrides) if overrides else spec
+        name = _name_of_config(cfg)
+    return OPTIMIZERS[name].factory(cfg, forward_fn, loss_spec,
+                                    share_counts=share_counts,
+                                    state_sharding=state_sharding)

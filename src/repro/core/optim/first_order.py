@@ -1,0 +1,115 @@
+"""First-order optimisers on the unified protocol: SGD with momentum (and
+optional 1/(1+kt) learning-rate decay driven by the state's step counter)
+and Adam (Kingma & Ba 2015).  Built from scratch — no optax in this
+container.
+
+These are the paper's baselines, but they run through the SAME
+``Optimizer`` protocol, step builder, driver and checkpoint path as
+NG/HF/NGHF — including the lattice sequence-training path
+(``launch.train --arch lstm-asr --optimizer sgd|adam``), the paper's
+actual SGD/Adam comparison.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_math as tm
+from repro.core.curvature import grad_and_loss
+from repro.core.optim.base import Optimizer, register_optimizer
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.0
+    clip_norm: float = 0.0
+    decay: float = 0.0       # lr_t = lr / (1 + decay * t), t = state["step"]
+                             # BEFORE the update (t=0 first step => full lr);
+                             # 0.0 => constant lr, bit-identical to the
+                             # historical stateless sgd_update
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 0.0
+
+
+def _clip(grads, clip_norm):
+    if not clip_norm:
+        return grads
+    g_norm = tm.norm(grads)
+    factor = jnp.minimum(1.0, clip_norm / jnp.maximum(g_norm, 1e-12))
+    return tm.scale(grads, factor)
+
+
+class SGD(Optimizer):
+    """state = {"mom": θ-like momentum, "step": int32 update counter}.
+    ``step`` counts completed updates and drives the optional ``decay``
+    schedule (it used to be tracked-but-dead; now it is API)."""
+
+    name = "sgd"
+
+    def __init__(self, cfg: SGDConfig, forward_fn, loss_spec, **_):
+        self.cfg, self.forward_fn, self.loss_spec = cfg, forward_fn, loss_spec
+
+    def state_template(self, theta, scalar):
+        return {"mom": theta(), "step": scalar(jnp.int32, 0)}
+
+    def step(self, params, state, grad_batch, cg_batch=None):
+        cfg = self.cfg
+        loss, metrics, grads = grad_and_loss(self.forward_fn, self.loss_spec,
+                                             params, grad_batch)
+        grads = _clip(grads, cfg.clip_norm)
+        mom = tm.axpy(cfg.momentum, state["mom"], grads)
+        # lr is always a 0-d array so the metric key is present whether or
+        # not decay is on (a Python float would be dropped by the step
+        # builders' scalar filter)
+        lr = jnp.asarray(cfg.lr, jnp.float32)
+        if cfg.decay:
+            lr = lr / (1.0 + cfg.decay * state["step"].astype(jnp.float32))
+        new_params = tm.add(params, tm.cast_like(tm.scale(mom, -lr), params))
+        metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads), lr=lr)
+        return new_params, {"mom": mom, "step": state["step"] + 1}, metrics
+
+
+class Adam(Optimizer):
+    """state = {"m": θ-like first moment, "v": θ-like second moment,
+    "step": int32 counter driving the bias correction}."""
+
+    name = "adam"
+
+    def __init__(self, cfg: AdamConfig, forward_fn, loss_spec, **_):
+        self.cfg, self.forward_fn, self.loss_spec = cfg, forward_fn, loss_spec
+
+    def state_template(self, theta, scalar):
+        return {"m": theta(), "v": theta(), "step": scalar(jnp.int32, 0)}
+
+    def step(self, params, state, grad_batch, cg_batch=None):
+        cfg = self.cfg
+        loss, metrics, grads = grad_and_loss(self.forward_fn, self.loss_spec,
+                                             params, grad_batch)
+        grads = _clip(grads, cfg.clip_norm)
+        step = state["step"] + 1
+        m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) *
+                         jnp.square(g), state["v"], grads)
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda mm, vv: -cfg.lr * (mm / bc1) / (jnp.sqrt(vv / bc2)
+                                                   + cfg.eps), m, v)
+        new_params = tm.add(params, tm.cast_like(upd, params))
+        metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads))
+        return new_params, {"m": m, "v": v, "step": step}, metrics
+
+
+register_optimizer("sgd", SGDConfig, SGD)
+register_optimizer("adam", AdamConfig, Adam)

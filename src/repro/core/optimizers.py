@@ -1,73 +1,33 @@
-"""First-order baselines the paper compares against (built from scratch —
-no optax in this container): SGD with momentum and Adam (Kingma & Ba 2015).
+"""Thin compatibility shims over ``repro.core.optim.first_order``.
+
+SGD and Adam are now stateful ``Optimizer`` implementations on the
+unified protocol (``repro.core.optim``); these module-level functions
+preserve the historical stateless signatures for old call sites.  New
+code should use ``optim.get_optimizer("sgd" | "adam", ...)``.
+
+State contents (documented API — see ``optim.base``):
+  sgd  : {"mom": θ-like momentum, "step": int32 — drives SGDConfig.decay}
+  adam : {"m": θ-like, "v": θ-like, "step": int32 (bias correction)}
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from repro.core.optim.first_order import SGD, Adam, AdamConfig, SGDConfig
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import tree_math as tm
-from repro.core.curvature import grad_and_loss
-
-
-@dataclass(frozen=True)
-class SGDConfig:
-    lr: float = 1e-2
-    momentum: float = 0.0
-    clip_norm: float = 0.0
-
-
-@dataclass(frozen=True)
-class AdamConfig:
-    lr: float = 1e-3
-    b1: float = 0.9
-    b2: float = 0.999
-    eps: float = 1e-8
-    clip_norm: float = 0.0
-
-
-def _clip(grads, clip_norm):
-    if not clip_norm:
-        return grads
-    g_norm = tm.norm(grads)
-    factor = jnp.minimum(1.0, clip_norm / jnp.maximum(g_norm, 1e-12))
-    return tm.scale(grads, factor)
+__all__ = ["SGDConfig", "AdamConfig", "sgd_init", "sgd_update",
+           "adam_init", "adam_update"]
 
 
 def sgd_init(params, cfg: SGDConfig):
-    return {"mom": tm.zeros_like(params), "step": jnp.zeros((), jnp.int32)}
+    return SGD(cfg, None, None).init(params)
 
 
 def sgd_update(forward_fn, loss_spec, cfg: SGDConfig, params, batch, state):
-    loss, metrics, grads = grad_and_loss(forward_fn, loss_spec, params, batch)
-    grads = _clip(grads, cfg.clip_norm)
-    mom = tm.axpy(cfg.momentum, state["mom"], grads)
-    new_params = tm.add(params, tm.cast_like(tm.scale(mom, -cfg.lr), params))
-    metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads))
-    return new_params, {"mom": mom, "step": state["step"] + 1}, metrics
+    return SGD(cfg, forward_fn, loss_spec).step(params, state, batch)
 
 
 def adam_init(params, cfg: AdamConfig):
-    return {"m": tm.zeros_like(params), "v": tm.zeros_like(params),
-            "step": jnp.zeros((), jnp.int32)}
+    return Adam(cfg, None, None).init(params)
 
 
 def adam_update(forward_fn, loss_spec, cfg: AdamConfig, params, batch, state):
-    loss, metrics, grads = grad_and_loss(forward_fn, loss_spec, params, batch)
-    grads = _clip(grads, cfg.clip_norm)
-    step = state["step"] + 1
-    m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
-                     state["m"], grads)
-    v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * jnp.square(g),
-                     state["v"], grads)
-    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
-    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
-    upd = jax.tree.map(
-        lambda mm, vv: -cfg.lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps),
-        m, v)
-    new_params = tm.add(params, tm.cast_like(upd, params))
-    metrics = dict(metrics, loss=loss, grad_norm=tm.norm(grads))
-    return new_params, {"m": m, "v": v, "step": step}, metrics
+    return Adam(cfg, forward_fn, loss_spec).step(params, state, batch)

@@ -13,12 +13,12 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.base import INPUT_SHAPES, ArchConfig, get_config, list_archs  # noqa: E402
-from repro.core.nghf import SecondOrderConfig                      # noqa: E402
+from repro.core.optim import SecondOrderConfig                     # noqa: E402
 from repro.launch.hlo_analysis import analyze as analyze_hlo       # noqa: E402
 from repro.launch.mesh import make_production_mesh                 # noqa: E402
 from repro.launch.sharding import input_shardings, param_shardings  # noqa: E402
 from repro.launch.steps import (build_prefill_step, build_serve_step,  # noqa: E402
-                                build_train_step)
+                                build_step)
 from repro.models.registry import get_model                        # noqa: E402
 
 """Multi-pod dry-run (deliverable e).
@@ -132,11 +132,15 @@ def _step_and_args(cfg: ArchConfig, shape_name: str, mesh):
         socfg = SecondOrderConfig(method="nghf", cg_iters=8, ng_iters=4,
                                   state_dtype=state_dtype, eval_every=2,
                                   grad_microbatches=mb)
-        fn = build_train_step(cfg, socfg, cg_frac=16,
-                              min_cg=mesh.devices.size // mesh.shape["model"],
-                              state_sharding=pshard)
+        fn, opt = build_step(cfg, socfg, cg_frac=16,
+                             min_cg=mesh.devices.size // mesh.shape["model"],
+                             state_sharding=pshard)
+        # optimiser state specs: abstract init (no arrays are materialised)
+        # + the protocol's sharding mirror of the param shardings
+        sshapes = jax.eval_shape(opt.init, pshapes)
+        sshard = opt.state_shardings(pshard)
         ishard = input_shardings(cfg, mesh, specs)
-        return fn, (pshapes, specs), (pshard, ishard)
+        return fn, (pshapes, sshapes, specs), (pshard, sshard, ishard)
     if shp.mode == "prefill":
         fn = build_prefill_step(cfg)
         ishard = input_shardings(cfg, mesh, specs)
@@ -175,10 +179,11 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     try:
         fn, args, in_shardings = _step_and_args(cfg, shape_name, mesh)
-        # outputs: new params keep the storage sharding; metrics replicated
+        # outputs: new params + optimiser state keep the storage sharding;
+        # metrics replicated
         out_shardings = None
         if INPUT_SHAPES[shape_name].mode == "train":
-            out_shardings = (in_shardings[0], None)
+            out_shardings = (in_shardings[0], in_shardings[1], None)
         elif INPUT_SHAPES[shape_name].mode == "decode":
             out_shardings = (None, in_shardings[1])
         with mesh, _fsdp_ctx(cfg, mesh):

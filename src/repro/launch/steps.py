@@ -1,38 +1,42 @@
 """Step builders: the jitted functions that the trainer, server, and
 multi-pod dry-run lower.
 
-  * ``build_train_step``   — one FULL NGHF update (gradient accumulation on
-    the global batch + inner Fisher-CG + outer GN-CG with candidate
-    selection on a CG sub-batch), as a single jitted function.  Under pjit
-    the batch means become all-reduces over (pod, data) — the paper's
-    Fig. 1 distributed scheme.  Candidate evaluation inside the CG stage
-    follows ``socfg.eval_accumulators`` ("loss_only" by default: the
-    LossSpec's value-only fast path — for the lattice losses that is the
-    engine's fused forward-only statistics).
-  * ``build_sequence_step`` — the same two-stage update for the paper's
+  * ``build_step``          — ONE builder for every optimiser on the LM
+    archetypes.  ``build_step(cfg, opt_spec, ...)`` returns
+    ``(step, opt)`` where ``step(params, opt_state, batch) ->
+    (params, opt_state, metrics)`` has the SAME signature whether
+    ``opt_spec`` names SGD, Adam, NG, HF or NGHF — second-order
+    optimisers slice their CG sub-batch from the gradient batch
+    internally (``cg_frac``); first-order ones just take the batch.
+    Under pjit the batch means become all-reduces over (pod, data) —
+    the paper's Fig. 1 distributed scheme.
+  * ``build_sequence_step`` — the same uniform step for the paper's
     actual workload: an acoustic model + lattice MMI/MPE ``LossSpec``.
-    Takes an explicit CG batch (the paper samples it from the WHOLE
-    training set, not the gradient batch — Sec. 4.1) and, under a mesh,
-    threads state sharding + the lattice-engine constraints so the
-    statistics stage (``lattice_stats``) is GSPMD data-parallel alongside
-    the gradient stage.
-  * ``build_sgd_step`` / ``build_adam_step`` — first-order baselines.
+    ``step(params, opt_state, grad_batch, cg_batch=None)`` takes an
+    explicit CG batch (the paper samples it from the WHOLE training set,
+    not the gradient batch — Sec. 4.1); first-order optimisers ignore it
+    (``opt.uses_cg_batch`` tells the driver whether to build one).
+    Under a mesh, threads state sharding + the lattice-engine constraints
+    so the statistics stage (``lattice_stats``) is GSPMD data-parallel
+    alongside the gradient stage.
   * ``build_prefill_step`` — sequence forward returning last-position
     logits only (never materialises (B, T, V)).
   * ``build_serve_step``   — ONE new token against a seq_len KV cache.
+
+Candidate evaluation inside the CG stage follows the optimiser config's
+``eval_accumulators`` ("loss_only" by default: the LossSpec's value-only
+fast path — for the lattice losses that is the engine's fused
+forward-only statistics).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.nghf import SecondOrderConfig, second_order_update
-from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
-                                   adam_update, sgd_init, sgd_update)
+from repro.core.optim import Optimizer, get_optimizer
 from repro.losses.chunked_lm import ChunkedCELoss
 from repro.models.registry import get_model
 
@@ -76,24 +80,33 @@ def cg_sub_batch(batch: dict, frac: int, min_size: int):
     return jax.tree.map(slc, batch)
 
 
-def build_train_step(cfg: ArchConfig, socfg: SecondOrderConfig,
-                     *, cg_frac: int = 8, min_cg: int = 1,
-                     state_sharding=None) -> Callable:
+def build_step(cfg: ArchConfig, opt_spec, *, cg_frac: int = 8,
+               min_cg: int = 1, state_sharding=None,
+               **opt_overrides) -> Tuple[Callable, Optimizer]:
+    """One uniform LM train step for ANY registered optimiser.
+
+    ``opt_spec``: a registry name ("sgd" | "adam" | "ng" | "hf" | "nghf")
+    or an already-built config dataclass; ``opt_overrides`` are forwarded
+    to ``optim.get_optimizer``.  Returns ``(step, opt)`` — jit ``step``
+    and seed the loop with ``opt.init(params)``.
+    """
     model = get_model(cfg)
     loss = ChunkedCELoss()
     fwd = _lm_forward(cfg, model)
+    opt = get_optimizer(opt_spec, fwd, loss, state_sharding=state_sharding,
+                        **opt_overrides)
 
-    def train_step(params, batch):
+    def step(params, opt_state, batch):
         lm_batch = dict(batch)
         if "labels" not in lm_batch:
             lm_batch["labels"] = lm_batch["tokens"]
-        cg_batch = cg_sub_batch(lm_batch, cg_frac, min_cg)
-        new_params, metrics = second_order_update(
-            fwd, loss, socfg, params, lm_batch, cg_batch, share_counts=None,
-            state_sharding=state_sharding)
-        return new_params, _scalar_metrics(metrics)
+        cg_batch = (cg_sub_batch(lm_batch, cg_frac, min_cg)
+                    if opt.uses_cg_batch else None)
+        new_params, new_state, metrics = opt.step(params, opt_state,
+                                                  lm_batch, cg_batch)
+        return new_params, new_state, _scalar_metrics(metrics)
 
-    return train_step
+    return step, opt
 
 
 def acoustic_forward_fn(acfg):
@@ -106,75 +119,42 @@ def acoustic_forward_fn(acfg):
     return fwd
 
 
-def build_sequence_step(acfg, socfg: SecondOrderConfig, *,
+def build_sequence_step(acfg, opt_spec, *,
                         loss: str = "mpe", kappa: float = 0.5,
                         backend: str = "auto", mesh=None,
-                        state_sharding=None, share_counts=None) -> Callable:
-    """One full NGHF/NG/HF update for lattice-based sequence training.
+                        state_sharding=None, share_counts=None,
+                        **opt_overrides) -> Tuple[Callable, Optimizer]:
+    """One uniform update for lattice-based sequence training — any
+    optimiser, the paper's actual SGD/Adam-vs-NGHF comparison included.
 
-    Returns ``step(params, grad_batch, cg_batch) -> (params, metrics)``
-    where both batches come from ``data.synthetic.asr_batch`` (feats +
-    labels + a ``Lattice``).  The CG batch is explicit because the paper
-    samples it from the entire training set (Sec. 4.1), not as a slice of
-    the gradient batch.
+    Returns ``(step, opt)`` with ``step(params, opt_state, grad_batch,
+    cg_batch=None) -> (params, opt_state, metrics)`` where both batches
+    come from ``data.synthetic.asr_batch`` (feats + labels + a
+    ``Lattice``).  The CG batch is explicit because the paper samples it
+    from the entire training set (Sec. 4.1), not as a slice of the
+    gradient batch; pass None for first-order optimisers
+    (``opt.uses_cg_batch`` is the driver's cue).
 
     Under ``mesh`` the lattice ``LossSpec`` constrains the engine's (B, A)
     arc tensors to the data axes (``lattice_stats(..., mesh=...)``) and
-    ``state_sharding`` pins the θ-sized CG state, so jitting this function
-    with ``launch.sharding.sequence_input_shardings``-placed batches runs
-    both Fig. 1 stages GSPMD data-parallel.
-
-    The CG stage's per-iteration candidate evaluation (Alg. 1, the
-    dominant Table-1 cost) runs the statistics mode selected by
-    ``socfg.eval_accumulators`` — "loss_only" by default, i.e.
-    ``lattice_stats(..., accumulators="loss_only")``: forward-only
-    recursion on scan/levelized, ONE fused kernel on the Pallas backend.
-    The gradient and curvature stages always keep full statistics.
+    ``state_sharding`` pins the θ-sized CG/optimiser state, so jitting
+    this function with ``launch.sharding.sequence_input_shardings``-placed
+    batches runs both Fig. 1 stages GSPMD data-parallel.
     """
     from repro.losses.sequence import get_loss
 
     loss_spec = get_loss(loss, kappa=kappa, backend=backend, mesh=mesh)
     fwd = acoustic_forward_fn(acfg)
+    opt = get_optimizer(opt_spec, fwd, loss_spec,
+                        share_counts=share_counts,
+                        state_sharding=state_sharding, **opt_overrides)
 
-    def sequence_step(params, grad_batch, cg_batch):
-        new_params, metrics = second_order_update(
-            fwd, loss_spec, socfg, params, grad_batch, cg_batch,
-            share_counts=share_counts, state_sharding=state_sharding)
-        return new_params, _scalar_metrics(metrics)
-
-    return sequence_step
-
-
-def build_sgd_step(cfg: ArchConfig, opt: SGDConfig):
-    model = get_model(cfg)
-    loss = ChunkedCELoss()
-    fwd = _lm_forward(cfg, model)
-
-    def step(params, opt_state, batch):
-        b = dict(batch)
-        if "labels" not in b:
-            b["labels"] = b["tokens"]
-        new_params, new_state, metrics = sgd_update(fwd, loss, opt, params, b,
-                                                    opt_state)
+    def sequence_step(params, opt_state, grad_batch, cg_batch=None):
+        new_params, new_state, metrics = opt.step(params, opt_state,
+                                                  grad_batch, cg_batch)
         return new_params, new_state, _scalar_metrics(metrics)
 
-    return step, partial(sgd_init, cfg=opt)
-
-
-def build_adam_step(cfg: ArchConfig, opt: AdamConfig):
-    model = get_model(cfg)
-    loss = ChunkedCELoss()
-    fwd = _lm_forward(cfg, model)
-
-    def step(params, opt_state, batch):
-        b = dict(batch)
-        if "labels" not in b:
-            b["labels"] = b["tokens"]
-        new_params, new_state, metrics = adam_update(fwd, loss, opt, params, b,
-                                                     opt_state)
-        return new_params, new_state, _scalar_metrics(metrics)
-
-    return step, partial(adam_init, cfg=opt)
+    return sequence_step, opt
 
 
 def build_prefill_step(cfg: ArchConfig):

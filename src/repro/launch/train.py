@@ -4,15 +4,19 @@ Runs NGHF / NG / HF / SGD / Adam on any registered architecture with the
 synthetic LM pipeline — or, with an ``--arch *-asr`` id, runs the paper's
 actual workload: lattice-based discriminative sequence training (MPE/MMI)
 of an acoustic model, through the SAME distributed launch layer (mesh +
-sharded batches + jitted ``second_order_update``).  On CPU use ``--smoke``
-(reduced geometry); on a real cluster the same script runs against the
-production mesh (``--mesh``).
+sharded batches + one jitted uniform step).  Every optimiser goes through
+the same ``core.optim`` protocol: ONE driver loop, ONE checkpoint format
+(full ``(params, opt_state, step)`` — resume is exact), no per-optimiser
+branching.  On CPU use ``--smoke`` (reduced geometry); on a real cluster
+the same script runs against the production mesh (``--mesh``).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
       --optimizer nghf --steps 20 --batch 8 --seq 128
   PYTHONPATH=src python -m repro.launch.train --arch lstm-asr --smoke \
-      --optimizer nghf --loss mpe --steps 8 --batch 32
+      --optimizer adam --loss mpe --steps 100 --batch 16
+  PYTHONPATH=src python -m repro.launch.train --arch lstm-asr --smoke \
+      --optimizer nghf --warm-start --adapt-lam --steps 8 --batch 32
 """
 from __future__ import annotations
 
@@ -24,12 +28,10 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import load_train_state, save_train_state
 from repro.configs.acoustic import ASR_ARCHS, get_acoustic_config
 from repro.configs.base import get_config, list_archs
-from repro.core.nghf import SecondOrderConfig
-from repro.core.optimizers import (AdamConfig, SGDConfig, adam_init,
-                                   adam_update, sgd_init, sgd_update)
+from repro.core.optim import config_for, list_optimizers
 from repro.data.pipeline import shard_batch
 from repro.data.synthetic import EpochPlan, asr_batch, lm_batch
 from repro.launch import steps as S
@@ -37,6 +39,11 @@ from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.sharding import (input_shardings, param_shardings,
                                    sequence_input_shardings)
 from repro.models.registry import get_model
+
+# default learning rates when --lr is not given (ignored by second-order
+# configs, which have no ``lr`` field)
+SEQ_DEFAULT_LR = {"sgd": 0.2, "adam": 2e-3}
+LM_DEFAULT_LR = {"sgd": 0.3, "adam": 3e-4}
 
 
 # ---------------------------------------------------------------------------
@@ -56,9 +63,13 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
                    cg_iters=6, ng_iters=2, lam=1.0, lr=None, noise=1.2,
                    smoke=False, mesh=None, backend="auto", init_params=None,
                    seed=0, verbose=True, ckpt_dir=None, resume=False,
-                   dataset_batches=None):
+                   dataset_batches=None, ckpt_every=10, warm_start=False,
+                   adapt_lam=False, preconditioner=None):
     """Lattice MPE/MMI (or frame-CE) training of an acoustic model through
     the distributed launch layer.  Returns ``(params, log)``.
+
+    Any registered optimiser works — NGHF and the paper's first-order
+    baselines run the SAME loop, step signature and checkpoint format.
 
     ``mesh``: None, a ``jax.sharding.Mesh``, or "single-pod"/"multi-pod".
     Under a mesh the acoustic params are replicated (they are small; the
@@ -97,34 +108,22 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
             b = jax.device_put(b, sequence_input_shardings(mesh, b))
         return b
 
-    second_order = optimizer in ("nghf", "ng", "hf")
-    if second_order:
-        socfg = SecondOrderConfig(method=optimizer, cg_iters=cg_iters,
-                                  ng_iters=ng_iters, lam=lam)
-        counts = acoustic.share_counts(acfg, params)
-        step = jax.jit(S.build_sequence_step(
-            acfg, socfg, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
-            state_sharding=state_sharding, share_counts=counts))
-        opt_state = None
-    else:
-        from repro.losses.sequence import get_loss
-        loss_spec = get_loss(loss, kappa=kappa, backend=backend, mesh=mesh)
-        fwd = S.acoustic_forward_fn(acfg)
-        if optimizer == "sgd":
-            ocfg = SGDConfig(lr=lr if lr is not None else 0.2)
-            opt_state = sgd_init(params, ocfg)
-            upd = sgd_update
-        elif optimizer == "adam":
-            ocfg = AdamConfig(lr=lr if lr is not None else 2e-3)
-            opt_state = adam_init(params, ocfg)
-            upd = adam_update
-        else:
-            raise ValueError(optimizer)
-        step = jax.jit(lambda p, s, b: upd(fwd, loss_spec, ocfg, p, b, s))
+    ocfg = config_for(optimizer, cg_iters=cg_iters, ng_iters=ng_iters,
+                      lam=lam, warm_start=warm_start, adapt_lam=adapt_lam,
+                      preconditioner=preconditioner,
+                      lr=lr if lr is not None
+                      else SEQ_DEFAULT_LR.get(optimizer))
+    step_fn, opt = S.build_sequence_step(
+        acfg, ocfg, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
+        state_sharding=state_sharding,
+        share_counts=acoustic.share_counts(acfg, params))
+    step = jax.jit(step_fn)
+    opt_state = opt.init(params, state_sharding=state_sharding)
 
     start = 0
     if resume and ckpt_dir and os.path.exists(ckpt_dir):
-        params, start = load_checkpoint(ckpt_dir, params)
+        params, opt_state, start = load_train_state(ckpt_dir, params,
+                                                    opt_state)
         if verbose:
             print(f"[train] resumed from step {start}")
 
@@ -137,14 +136,10 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
     log = []
     for u in range(start, steps):
         t0 = time.time()
-        if second_order:
-            gb = make_batch(grad_seed(u), batch)
-            cb = make_batch(plan.cg_seed(0, u), cg_batch)
-            params, metrics = step(params, gb, cb)
-        else:
-            params, opt_state, metrics = step(params, opt_state,
-                                              make_batch(grad_seed(u),
-                                                         batch))
+        gb = make_batch(grad_seed(u), batch)
+        cb = make_batch(plan.cg_seed(0, u), cg_batch) \
+            if opt.uses_cg_batch else None
+        params, opt_state, metrics = step(params, opt_state, gb, cb)
         metrics = {k: float(v) for k, v in metrics.items()
                    if getattr(v, "ndim", 0) == 0}
         dt = time.time() - t0
@@ -153,10 +148,10 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
             key_metric = metrics.get("mpe_acc", metrics.get(
                 "mmi", metrics.get("ce", metrics.get("loss", float("nan")))))
             print(f"  seq step {u:4d} {loss}={key_metric:.4f} ({dt:.1f}s)")
-        if ckpt_dir and (u + 1) % 10 == 0:
-            save_checkpoint(ckpt_dir, params, step=u + 1)
+        if ckpt_dir and (u + 1) % ckpt_every == 0:
+            save_train_state(ckpt_dir, params, opt_state, step=u + 1)
     if ckpt_dir:
-        save_checkpoint(ckpt_dir, params, step=steps)
+        save_train_state(ckpt_dir, params, opt_state, step=steps)
     return params, log
 
 
@@ -184,13 +179,19 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2.5-3b",
                     choices=list_archs() + sorted(ASR_ARCHS))
     ap.add_argument("--optimizer", default="nghf",
-                    choices=["nghf", "ng", "hf", "sgd", "adam"])
+                    choices=list_optimizers())
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--cg-iters", type=int, default=8)
     ap.add_argument("--ng-iters", type=int, default=4)
     ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--warm-start", action="store_true",
+                    help="warm-start the outer CG from the previous Δθ")
+    ap.add_argument("--adapt-lam", action="store_true",
+                    help="Levenberg-Marquardt-style λ adaptation")
+    ap.add_argument("--preconditioner", default=None,
+                    choices=["identity", "share_counts", "fisher_diag"])
     ap.add_argument("--smoke", action="store_true",
                     help="reduced geometry for CPU")
     ap.add_argument("--mesh", default="none",
@@ -213,7 +214,9 @@ def main(argv=None):
             frames=args.frames, kappa=args.kappa, cg_iters=args.cg_iters,
             ng_iters=args.ng_iters, lr=args.lr, smoke=args.smoke,
             mesh=args.mesh, backend=args.lattice_backend,
-            ckpt_dir=args.ckpt_dir, resume=args.resume)
+            ckpt_dir=args.ckpt_dir, resume=args.resume,
+            warm_start=args.warm_start, adapt_lam=args.adapt_lam,
+            preconditioner=args.preconditioner)
         if args.log_json:
             with open(args.log_json, "w") as f:
                 json.dump(log, f, indent=1)
@@ -230,26 +233,25 @@ def main(argv=None):
           f"optimizer={args.optimizer}")
 
     mesh = _resolve_mesh(args.mesh)
+    pshard = None
     if mesh is not None:
         pshard = param_shardings(cfg, mesh, model.param_shapes())
         params = jax.tree.map(jax.device_put, params, pshard)
 
-    if args.optimizer in ("nghf", "ng", "hf"):
-        socfg = SecondOrderConfig(method=args.optimizer,
-                                  cg_iters=args.cg_iters,
-                                  ng_iters=args.ng_iters)
-        step = jax.jit(S.build_train_step(cfg, socfg, cg_frac=4))
-        opt_state = None
-    elif args.optimizer == "sgd":
-        fn, init = S.build_sgd_step(cfg, SGDConfig(lr=args.lr or 0.3))
-        step, opt_state = jax.jit(fn), init(params)
-    else:
-        fn, init = S.build_adam_step(cfg, AdamConfig(lr=args.lr or 3e-4))
-        step, opt_state = jax.jit(fn), init(params)
+    ocfg = config_for(args.optimizer, cg_iters=args.cg_iters,
+                      ng_iters=args.ng_iters, warm_start=args.warm_start,
+                      adapt_lam=args.adapt_lam,
+                      preconditioner=args.preconditioner,
+                      lr=args.lr if args.lr is not None
+                      else LM_DEFAULT_LR.get(args.optimizer))
+    step_fn, opt = S.build_step(cfg, ocfg, cg_frac=4, state_sharding=pshard)
+    step = jax.jit(step_fn)
+    opt_state = opt.init(params, state_sharding=pshard)
 
     start = 0
     if args.resume and args.ckpt_dir and os.path.exists(args.ckpt_dir):
-        params, start = load_checkpoint(args.ckpt_dir, params)
+        params, opt_state, start = load_train_state(args.ckpt_dir, params,
+                                                    opt_state)
         print(f"[train] resumed from step {start}")
 
     log = []
@@ -264,19 +266,16 @@ def main(argv=None):
         if mesh is not None:
             batch = shard_batch(batch, mesh)
         t0 = time.time()
-        if opt_state is None:
-            params, metrics = step(params, batch)
-        else:
-            params, opt_state, metrics = step(params, opt_state, batch)
+        params, opt_state, metrics = step(params, opt_state, batch)
         metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.time() - t0
         log.append(dict(step=i, time_s=dt, **metrics))
         print(f"  step {i:4d} loss={metrics.get('ce', metrics.get('loss')):.4f} "
               f"acc={metrics.get('acc', float('nan')):.3f} ({dt:.1f}s)")
         if args.ckpt_dir and (i + 1) % 10 == 0:
-            save_checkpoint(args.ckpt_dir, params, step=i + 1)
+            save_train_state(args.ckpt_dir, params, opt_state, step=i + 1)
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, params, step=args.steps)
+        save_train_state(args.ckpt_dir, params, opt_state, step=args.steps)
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(log, f, indent=1)

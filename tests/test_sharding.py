@@ -186,7 +186,7 @@ def test_sequence_step_matches_single_device():
         import numpy as np, jax
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
         from repro.configs.acoustic import LSTM
-        from repro.core.nghf import SecondOrderConfig
+        from repro.core.optim import SecondOrderConfig
         from repro.data.synthetic import asr_batch
         from repro.launch.steps import build_sequence_step
         from repro.launch.sharding import sequence_input_shardings
@@ -201,24 +201,27 @@ def test_sequence_step_matches_single_device():
         gb = asr_batch(0, batch=8, **kw)
         cb = asr_batch(1, batch=4, **kw)
 
-        step1 = jax.jit(build_sequence_step(acfg, socfg, loss="mpe",
-                                            kappa=0.5, share_counts=counts))
-        p1, m1 = step1(params, gb, cb)
+        fn1, opt1 = build_sequence_step(acfg, socfg, loss="mpe",
+                                        kappa=0.5, share_counts=counts)
+        p1, s1, m1 = jax.jit(fn1)(params, opt1.init(params), gb, cb)
 
         mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(4, 2),
                     ("data", "model"))
         pshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
-        step2 = jax.jit(build_sequence_step(acfg, socfg, loss="mpe",
-                                            kappa=0.5, mesh=mesh,
-                                            state_sharding=pshard,
-                                            share_counts=counts))
-        p2, m2 = step2(jax.device_put(params, pshard),
-                       jax.device_put(gb, sequence_input_shardings(mesh, gb)),
-                       jax.device_put(cb, sequence_input_shardings(mesh, cb)))
+        fn2, opt2 = build_sequence_step(acfg, socfg, loss="mpe",
+                                        kappa=0.5, mesh=mesh,
+                                        state_sharding=pshard,
+                                        share_counts=counts)
+        params2 = jax.device_put(params, pshard)
+        p2, s2, m2 = jax.jit(fn2)(
+            params2, opt2.init(params2, state_sharding=pshard),
+            jax.device_put(gb, sequence_input_shardings(mesh, gb)),
+            jax.device_put(cb, sequence_input_shardings(mesh, cb)))
         for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=5e-5)
         assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+        assert int(jax.tree.leaves(s2["step"])[0]) == 1
         print("SEQ_SHARD_OK")
     """)
     env = dict(os.environ,
