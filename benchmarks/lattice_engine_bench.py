@@ -12,6 +12,14 @@ the levelized-vs-per-arc speedup across commits:
 (B = batch, S = segments/levels, A = alternatives per segment; the arc
 count is S*A.)
 
+Every row carries a ``"topology"`` field: ``"sausage"`` rows time the
+confusion-network batches (the Pallas backend's specialised segment
+kernels), ``"dag"`` rows time random general-DAG batches
+(``make_random_dag_lattice``: skip arcs, variable fan-in/out, ragged
+arc padding) — on those the Pallas backend runs the general-DAG
+frontier kernels.  DAG rows replace (S, A) with the padded arc count
+``A`` and frame count ``T``.
+
 It also times the CANDIDATE-EVALUATION path (value only, no gradient —
 what ``cg_solve``'s per-iteration ``eval_fn`` executes, ~73 % of CG wall
 time in paper Table 1) with ``accumulators="full"`` vs the fused
@@ -34,9 +42,12 @@ import json
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from benchmarks.common import emit, time_compare
 from repro.lattice_engine import lattice_stats
-from repro.losses.lattice import make_lattice_batch
+from repro.losses.lattice import (batch_lattices, make_lattice_batch,
+                                  make_random_dag_lattice)
 
 K = 32
 SEG_LEN = 4
@@ -45,6 +56,20 @@ SHAPES = {                      # budget -> list of (B, n_seg, n_alt)
     "small": [(8, 64, 3)],
     "full": [(8, 64, 3), (8, 128, 4), (16, 64, 3)],
 }
+
+DAG_SHAPES = {                  # budget -> list of (B, T, max_arcs)
+    "small": [(8, 64, 220)],
+    "full": [(8, 64, 220), (16, 64, 220)],
+}
+
+
+def make_dag_batch(seed: int, *, batch: int, num_frames: int,
+                   max_arcs: int):
+    rng = np.random.default_rng(seed)
+    lats = [make_random_dag_lattice(rng, num_frames=num_frames,
+                                    num_states=K, max_arcs=max_arcs)
+            for _ in range(batch)]
+    return batch_lattices(lats)
 
 
 def backend_stage_fns(lat, lp, backends=("scan", "levelized", "pallas")):
@@ -102,7 +127,7 @@ def run(budget: str = "small", json_out: str | None = None):
                 f"lattice_engine.{backend}.B{B}S{S}A{A}", us,
                 f"ms_per_update={us / 1e3:.3f}"))
             rec = {"bench": "lattice_engine", "backend": backend,
-                   "B": B, "S": S, "A": A,
+                   "topology": "sausage", "B": B, "S": S, "A": A,
                    "ms_per_update": round(us / 1e3, 4)}
             json_rows.append(rec)
             print(json.dumps(rec))
@@ -113,7 +138,33 @@ def run(budget: str = "small", json_out: str | None = None):
                 f"ms_per_eval={us / 1e3:.3f}"))
             rec = {"bench": "lattice_engine_candidate_eval",
                    "backend": backend, "accumulators": acc,
-                   "B": B, "S": S, "A": A,
+                   "topology": "sausage", "B": B, "S": S, "A": A,
+                   "ms_per_eval": round(us / 1e3, 4)}
+            json_rows.append(rec)
+            print(json.dumps(rec))
+    for B, T, max_arcs in DAG_SHAPES.get(budget, DAG_SHAPES["small"]):
+        lat = make_dag_batch(0, batch=B, num_frames=T, max_arcs=max_arcs)
+        lp = jax.nn.log_softmax(
+            jax.random.normal(jax.random.PRNGKey(2), (B, T, K)), -1)
+        for backend, us in time_compare(backend_stage_fns(lat, lp),
+                                        lp).items():
+            rows.append(emit(
+                f"lattice_engine.dag.{backend}.B{B}T{T}A{max_arcs}", us,
+                f"ms_per_update={us / 1e3:.3f}"))
+            rec = {"bench": "lattice_engine", "backend": backend,
+                   "topology": "dag", "B": B, "T": T, "A": max_arcs,
+                   "ms_per_update": round(us / 1e3, 4)}
+            json_rows.append(rec)
+            print(json.dumps(rec))
+        for (backend, acc), us in time_compare(candidate_eval_fns(lat, lp),
+                                               lp).items():
+            rows.append(emit(
+                f"lattice_candidate_eval.dag.{backend}.{acc}."
+                f"B{B}T{T}A{max_arcs}", us,
+                f"ms_per_eval={us / 1e3:.3f}"))
+            rec = {"bench": "lattice_engine_candidate_eval",
+                   "backend": backend, "accumulators": acc,
+                   "topology": "dag", "B": B, "T": T, "A": max_arcs,
                    "ms_per_eval": round(us / 1e3, 4)}
             json_rows.append(rec)
             print(json.dumps(rec))

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Markdown link checker for the docs lane (stdlib only).
+
+Scans the given markdown files for inline links/images and verifies:
+
+  * relative links point at files that exist in the repo (anchors are
+    stripped; pure-anchor links are checked against the file's own
+    headings);
+  * http(s) links are NOT fetched (CI runs offline) — they are only
+    syntax-checked.
+
+Exit code 1 with a per-link report if anything is broken.
+
+    python scripts/check_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def heading_anchors(md_text: str) -> set[str]:
+    """GitHub-style anchors for every heading in the file."""
+    anchors = set()
+    for line in md_text.splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if not m:
+            continue
+        a = m.group(1).strip().lower()
+        a = re.sub(r"[`*_]", "", a)
+        a = re.sub(r"[^\w\- ]", "", a)
+        anchors.add(a.replace(" ", "-"))
+    return anchors
+
+
+def check_file(path: Path, repo_root: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    own_anchors = heading_anchors(text)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:].lower() not in own_anchors:
+                errors.append(f"{path}: missing anchor {target!r}")
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            try:
+                shown = resolved.relative_to(repo_root)
+            except ValueError:        # link escapes the repo root
+                shown = resolved
+            errors.append(f"{path}: broken link {target!r} "
+                          f"(resolved {shown})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in argv] or sorted(
+        list(repo_root.glob("*.md")) + list((repo_root / "docs").glob("*.md")))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f.resolve(), repo_root))
+    for e in errors:
+        print(f"BROKEN  {e}")
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

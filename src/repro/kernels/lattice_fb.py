@@ -307,6 +307,314 @@ def sausage_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
     return logz, cavg
 
 
+# ---------------------------------------------------------------------------
+# General-DAG kernels: level-frontier recursion over the levelized tensors
+# (losses.lattice.lattice_frontiers).  Same recursions as the levelized
+# scan backend, but the per-level gathers, the masked logsumexp/softmax
+# reductions and the level-major alpha/beta buffers all live in VMEM
+# inside one kernel invocation per utterance — no per-level HLO dispatch,
+# no (L*W+1,) buffer round-trips through HBM.  Unlike the sausage pair,
+# final arcs may sit on ANY level, so logZ/c_avg are reduced over the
+# final-flag mask at the end instead of from the last segment's carry.
+# ---------------------------------------------------------------------------
+
+
+def _masked_lse_rows(x, axis=-1):
+    """In-kernel masked logsumexp + masked-softmax weights over ``axis``
+    (entries at/near NEG are masked; all-masked rows -> exactly NEG and
+    all-zero weights) — the kernel-side twin of ``ref._masked_lse_row``."""
+    valid = x > NEG * 0.5
+    m = jnp.max(x, axis=axis)
+    m0 = jnp.where(m > NEG * 0.5, m, 0.0)
+    e = jnp.where(valid, jnp.exp(x - jnp.expand_dims(m0, axis)), 0.0)
+    z = jnp.sum(e, axis=axis)
+    has = jnp.any(valid, axis=axis)
+    lse = jnp.where(has,
+                    jnp.maximum(jnp.log(jnp.maximum(z, _EPS)) + m0, NEG),
+                    NEG)
+    w = e / jnp.expand_dims(jnp.maximum(z, _EPS), axis)
+    return lse, w
+
+
+def _dag_fwd_kernel(own_ref, corr_ref, start_ref, ok_ref, final_ref,
+                    pidx_ref, alpha_ref, calpha_ref, logz_ref, cavg_ref,
+                    *, num_levels: int, width: int):
+    own = own_ref[...].astype(jnp.float32)          # (L, W)
+    corr = corr_ref[...].astype(jnp.float32)
+    start = start_ref[...] > 0.5
+    ok = ok_ref[...] > 0.5
+    pidx = pidx_ref[...]                            # (L, W, P)
+    L, W = num_levels, width
+    LW = L * W
+
+    def level_step(l, carry):
+        a_buf, c_buf = carry                        # (LW+1,)
+        pidx_l = jax.lax.dynamic_index_in_dim(pidx, l, 0, keepdims=False)
+        pa = a_buf[pidx_l]                          # (W, P)
+        pc = c_buf[pidx_l]
+        in_log, w = _masked_lse_rows(pa)
+        c_in = jnp.sum(w * pc, axis=-1)
+        own_l = jax.lax.dynamic_index_in_dim(own, l, 0, keepdims=False)
+        corr_l = jax.lax.dynamic_index_in_dim(corr, l, 0, keepdims=False)
+        start_l = jax.lax.dynamic_index_in_dim(start, l, 0, keepdims=False)
+        ok_l = jax.lax.dynamic_index_in_dim(ok, l, 0, keepdims=False)
+        a_val = jnp.where(start_l, own_l, own_l + in_log)
+        c_val = corr_l + jnp.where(start_l, 0.0, c_in)
+        a_val = jnp.where(ok_l, a_val, NEG)
+        c_val = jnp.where(ok_l, c_val, 0.0)
+        a_buf = jax.lax.dynamic_update_slice(a_buf, a_val, (l * W,))
+        c_buf = jax.lax.dynamic_update_slice(c_buf, c_val, (l * W,))
+        return a_buf, c_buf
+
+    a_buf, c_buf = jax.lax.fori_loop(
+        0, L, level_step,
+        (jnp.full((LW + 1,), NEG, jnp.float32),
+         jnp.zeros((LW + 1,), jnp.float32)))
+    alpha_ref[...] = a_buf[:LW].reshape(L, W)
+    calpha_ref[...] = c_buf[:LW].reshape(L, W)
+    # final-arc reduction: finals may live on any level in a general DAG
+    fin = final_ref[...].reshape(-1) > 0.5          # (LW,)
+    af = jnp.where(fin, a_buf[:LW], NEG)
+    logz, w = _masked_lse_rows(af)
+    logz_ref[0] = logz
+    cavg_ref[0] = jnp.sum(w * c_buf[:LW])
+
+
+def _dag_bwd_kernel(own_ref, corr_ref, final_ref, ok_ref, sidx_ref,
+                    beta_ref, cbeta_ref, *, num_levels: int, width: int):
+    own = own_ref[...].astype(jnp.float32)          # (L, W)
+    corr = corr_ref[...].astype(jnp.float32)
+    final = final_ref[...] > 0.5
+    ok = ok_ref[...] > 0.5
+    sidx = sidx_ref[...]                            # (L, W, S)
+    L, W = num_levels, width
+    LW = L * W
+    okf = ok.reshape(-1)
+    own_pad = jnp.concatenate(
+        [jnp.where(okf, own.reshape(-1), NEG),
+         jnp.full((1,), NEG, jnp.float32)])         # (LW+1,)
+    corr_pad = jnp.concatenate(
+        [jnp.where(okf, corr.reshape(-1), 0.0),
+         jnp.zeros((1,), jnp.float32)])
+
+    def level_step(i, carry):
+        b_buf, cb_buf = carry                       # (LW+1,)
+        l = L - 1 - i
+        sidx_l = jax.lax.dynamic_index_in_dim(sidx, l, 0, keepdims=False)
+        s_out = jnp.where(sidx_l < LW, b_buf[sidx_l] + own_pad[sidx_l],
+                          NEG)                      # (W, S)
+        sc = cb_buf[sidx_l] + corr_pad[sidx_l]
+        out_log, w = _masked_lse_rows(s_out)
+        c_out = jnp.sum(w * sc, axis=-1)
+        final_l = jax.lax.dynamic_index_in_dim(final, l, 0, keepdims=False)
+        ok_l = jax.lax.dynamic_index_in_dim(ok, l, 0, keepdims=False)
+        b_val = jnp.where(final_l, 0.0, out_log)
+        c_val = jnp.where(final_l, 0.0, c_out)
+        b_val = jnp.where(ok_l, b_val, NEG)
+        c_val = jnp.where(ok_l, c_val, 0.0)
+        b_buf = jax.lax.dynamic_update_slice(b_buf, b_val, (l * W,))
+        cb_buf = jax.lax.dynamic_update_slice(cb_buf, c_val, (l * W,))
+        return b_buf, cb_buf
+
+    b_buf, cb_buf = jax.lax.fori_loop(
+        0, L, level_step,
+        (jnp.full((LW + 1,), NEG, jnp.float32),
+         jnp.zeros((LW + 1,), jnp.float32)))
+    beta_ref[...] = b_buf[:LW].reshape(L, W)
+    cbeta_ref[...] = cb_buf[:LW].reshape(L, W)
+
+
+def dag_forward(own, corr, start, ok, final, pidx, *,
+                interpret: bool | None = None):
+    """General-DAG forward kernel over level-major frontier tensors.
+
+    own/corr: (B, L, W) f32 per-slot scores (acoustic+lm; NEG at empty
+    slots) and correctness counts; start/ok/final: (B, L, W) f32 flags
+    (nonzero = set); pidx: (B, L, W, P) int32 predecessor positions into
+    the flat (L*W+1,) level-major buffer, dump slot L*W
+    (``losses.lattice.lattice_frontiers``).
+
+    Returns (alpha (B,L,W), c_alpha (B,L,W), logZ (B,), c_avg (B,)).
+    Validated against ``ref.dag_forward_ref``.
+    """
+    B, L, W = own.shape
+    P = pidx.shape[-1]
+    kernel = functools.partial(_dag_fwd_kernel, num_levels=L, width=W)
+    alpha, c_alpha, logz, cavg = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W, P), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, 1), lambda b: (b, 0)),
+            pl.BlockSpec((None, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=_auto_interpret(interpret),
+    )(own.astype(jnp.float32), corr.astype(jnp.float32),
+      start.astype(jnp.float32), ok.astype(jnp.float32),
+      final.astype(jnp.float32), pidx.astype(jnp.int32))
+    return alpha, c_alpha, logz[:, 0], cavg[:, 0]
+
+
+def dag_backward(own, corr, final, ok, sidx, *,
+                 interpret: bool | None = None):
+    """Backward (beta / c_beta) companion of :func:`dag_forward` over the
+    successor frontier positions ``sidx`` (B, L, W, S).  beta excludes the
+    arc's own score (FBStats convention).  Validated against
+    ``ref.dag_backward_ref``."""
+    B, L, W = own.shape
+    S = sidx.shape[-1]
+    kernel = functools.partial(_dag_bwd_kernel, num_levels=L, width=W)
+    beta, c_beta = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W, S), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, L, W), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+        ],
+        interpret=_auto_interpret(interpret),
+    )(own.astype(jnp.float32), corr.astype(jnp.float32),
+      final.astype(jnp.float32), ok.astype(jnp.float32),
+      sidx.astype(jnp.int32))
+    return beta, c_beta
+
+
+def _dag_loss_only_kernel(cum_ref, idx_ref, fcs_ref, level_ref, pidx_ref,
+                          logz_ref, cavg_ref, *, num_levels: int,
+                          width: int, num_arcs: int):
+    """Fused general-DAG candidate-evaluation kernel, batch-blocked: the
+    in-kernel pieces of ``_loss_only_kernel`` (combined endpoint gather on
+    the centred cumsum grid, arc->level-major gather) plus the
+    frontier-recursion forward pass of ``_dag_fwd_kernel`` batched over B,
+    ending in the final-arc reduction.  Only the two (B,) outputs leave.
+
+    fcs: (B, 6, A) f32 packed [span, lm, corr, arc_mask, is_start,
+    is_final]; pidx: (B, L, W, P) predecessor positions.
+    """
+    cum = cum_ref[...]
+    g = jnp.take_along_axis(cum, idx_ref[...], axis=1)         # (B, 3A)
+    A = num_arcs
+    fcs = fcs_ref[...]
+    score_arc = (g[:, :A] - g[:, A:2 * A]
+                 + fcs[:, 0] * g[:, 2 * A:]) + fcs[:, 1]
+    la = level_ref[...]                                        # (B, L, W)
+    B = la.shape[0]
+    L, W = num_levels, width
+    LW = L * W
+    safe = jnp.maximum(la, 0).reshape(B, 1, LW)
+    stacked = jnp.stack([score_arc, fcs[:, 2], fcs[:, 3], fcs[:, 4],
+                         fcs[:, 5]], axis=1)                   # (B, 5, A)
+    gath = jnp.take_along_axis(stacked, safe, axis=2).reshape(B, 5, L, W)
+    empty = la < 0
+    score = jnp.where(empty, NEG, gath[:, 0])
+    corr = jnp.where(empty, 0.0, gath[:, 1])
+    ok = jnp.where(empty, 0.0, gath[:, 2]) > 0.5
+    start = (jnp.where(empty, 0.0, gath[:, 3]) > 0.5) & ok
+    fin = (jnp.where(empty, 0.0, gath[:, 4]) > 0.5) & ok
+    pidx = pidx_ref[...]                                       # (B, L, W, P)
+
+    def level_step(l, carry):
+        a_buf, c_buf = carry                                   # (B, LW+1)
+        pidx_l = jax.lax.dynamic_index_in_dim(pidx, l, 1, keepdims=False)
+        flat = pidx_l.reshape(B, -1)                           # (B, W*P)
+        pa = jnp.take_along_axis(a_buf, flat, axis=1).reshape(pidx_l.shape)
+        pc = jnp.take_along_axis(c_buf, flat, axis=1).reshape(pidx_l.shape)
+        in_log, w = _masked_lse_rows(pa)                       # (B, W)
+        c_in = jnp.sum(w * pc, axis=-1)
+        own_l = jax.lax.dynamic_index_in_dim(score, l, 1, keepdims=False)
+        corr_l = jax.lax.dynamic_index_in_dim(corr, l, 1, keepdims=False)
+        start_l = jax.lax.dynamic_index_in_dim(start, l, 1, keepdims=False)
+        ok_l = jax.lax.dynamic_index_in_dim(ok, l, 1, keepdims=False)
+        a_val = jnp.where(start_l, own_l, own_l + in_log)
+        c_val = corr_l + jnp.where(start_l, 0.0, c_in)
+        a_val = jnp.where(ok_l, a_val, NEG)
+        c_val = jnp.where(ok_l, c_val, 0.0)
+        a_buf = jax.lax.dynamic_update_slice(a_buf, a_val, (0, l * W))
+        c_buf = jax.lax.dynamic_update_slice(c_buf, c_val, (0, l * W))
+        return a_buf, c_buf
+
+    a_buf, c_buf = jax.lax.fori_loop(
+        0, L, level_step,
+        (jnp.full((B, LW + 1), NEG, jnp.float32),
+         jnp.zeros((B, LW + 1), jnp.float32)))
+    af = jnp.where(fin.reshape(B, LW), a_buf[:, :LW], NEG)
+    logz, w = _masked_lse_rows(af)                             # (B,)
+    logz_ref[...] = logz
+    cavg_ref[...] = jnp.sum(w * c_buf[:, :LW], axis=-1)
+
+
+def dag_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
+                  is_start, is_final, level_arcs, pidx, *,
+                  kappa: float = 1.0, interpret: bool | None = None):
+    """Fused loss-only forward for GENERAL DAG lattices: (logZ (B,),
+    c_avg (B,)) straight from the frame log-probs and arc-layout lattice
+    fields, like :func:`sausage_loss_only`, but running the
+    frontier-recursion forward pass (predecessor-position gathers) instead
+    of the fully-connected segment recursion.
+
+    Extra inputs over the sausage variant: is_start/is_final (B, A) arc
+    flags (finals may sit on any level) and pidx (B, L, W, P) predecessor
+    positions (``losses.lattice.lattice_frontiers``).
+
+    Not differentiable directly — ``lattice_engine.pallas_backend`` wraps
+    it in a ``custom_jvp``.  Validated against ``ref.dag_loss_only_ref``.
+    """
+    B, T, K = log_probs.shape
+    A = start.shape[1]
+    L, W = level_arcs.shape[1], level_arcs.shape[2]
+    lp = log_probs.astype(jnp.float32)
+    mu = jnp.mean(lp, axis=1)                                  # (B, K)
+    cum = jnp.cumsum(lp - mu[:, None, :], axis=1)
+    cum = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum], axis=1)
+    cumext = jnp.concatenate([cum.reshape(B, -1), mu], axis=1) * kappa
+    lab = label.astype(jnp.int32)
+    idx = jnp.concatenate(
+        [end.astype(jnp.int32) * K + lab, start.astype(jnp.int32) * K + lab,
+         (T + 1) * K + lab], axis=1)                           # (B, 3A)
+    span = (end - start).astype(jnp.float32)
+    fcs = jnp.stack([span, lm.astype(jnp.float32), corr.astype(jnp.float32),
+                     arc_mask.astype(jnp.float32),
+                     is_start.astype(jnp.float32),
+                     is_final.astype(jnp.float32)], axis=1)    # (B, 6, A)
+    kernel = functools.partial(_dag_loss_only_kernel, num_levels=L,
+                               width=W, num_arcs=A)
+    logz, cavg = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=_auto_interpret(interpret),
+    )(cumext, idx, fcs, level_arcs.astype(jnp.int32),
+      pidx.astype(jnp.int32))
+    return logz, cavg
+
+
 def sausage_backward(scores, corr, mask=None, *,
                      interpret: bool | None = None):
     """Backward (beta / c_beta) companion of :func:`sausage_forward`.

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.cg_fused import cg_fused_update as _cg_pallas
+from repro.kernels.lattice_fb import dag_backward as _dag_bwd_pallas
+from repro.kernels.lattice_fb import dag_forward as _dag_fwd_pallas
+from repro.kernels.lattice_fb import dag_loss_only as _dag_loss_only_pallas
 from repro.kernels.lattice_fb import sausage_backward as _fb_bwd_pallas
 from repro.kernels.lattice_fb import sausage_forward as _fb_pallas
 from repro.kernels.lattice_fb import sausage_loss_only as _fb_loss_only_pallas
@@ -59,6 +62,40 @@ def sausage_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
     return _fb_loss_only_pallas(log_probs, start, end, label, lm, corr,
                                 arc_mask, level_arcs, kappa=kappa,
                                 interpret=None)
+
+
+def dag_forward(own, corr, start, ok, final, pidx, *,
+                use_pallas: bool = True):
+    """General-DAG forward recursion over level-major frontier tensors
+    (alpha, c_alpha, logZ, c_avg) — final arcs may sit on any level."""
+    if not use_pallas:
+        return ref.dag_forward_ref(own, corr, start, ok, final, pidx)
+    return _dag_fwd_pallas(own, corr, start, ok, final, pidx,
+                           interpret=None)
+
+
+def dag_backward(own, corr, final, ok, sidx, *, use_pallas: bool = True):
+    """General-DAG backward recursion (beta, c_beta) over the successor
+    frontier positions."""
+    if not use_pallas:
+        return ref.dag_backward_ref(own, corr, final, ok, sidx)
+    return _dag_bwd_pallas(own, corr, final, ok, sidx, interpret=None)
+
+
+def dag_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
+                  is_start, is_final, level_arcs, pidx, *,
+                  kappa: float = 1.0, use_pallas: bool = True):
+    """Fused general-DAG candidate-evaluation forward: (logZ, c_avg)
+    straight from the (B, T, K) frame log-probs + arc-layout lattice
+    fields + the levelized frontier tensors (score construction, the
+    arc->level-major gather and the frontier recursion all in-kernel)."""
+    if not use_pallas:
+        return ref.dag_loss_only_ref(log_probs, start, end, label, lm,
+                                     corr, arc_mask, is_start, is_final,
+                                     level_arcs, pidx, kappa=kappa)
+    return _dag_loss_only_pallas(log_probs, start, end, label, lm, corr,
+                                 arc_mask, is_start, is_final, level_arcs,
+                                 pidx, kappa=kappa, interpret=None)
 
 
 def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool = True):

@@ -134,6 +134,138 @@ def sausage_loss_only_ref(log_probs, start, end, label, lm, corr, arc_mask,
     return logz, cavg
 
 
+def _masked_lse_row(x, axis=-1):
+    """Row-wise logsumexp treating entries at/near _NEG as masked; an
+    all-masked row returns exactly _NEG.  Companion weights (masked
+    softmax: all-masked rows get all-zero weights) returned alongside."""
+    valid = x > _NEG * 0.5
+    m = jnp.max(x, axis=axis)
+    m0 = jnp.where(m > _NEG * 0.5, m, 0.0)
+    e = jnp.where(valid, jnp.exp(x - jnp.expand_dims(m0, axis)), 0.0)
+    z = jnp.sum(e, axis=axis)
+    has = jnp.any(valid, axis=axis)
+    lse = jnp.where(has,
+                    jnp.maximum(jnp.log(jnp.maximum(z, 1e-30)) + m0, _NEG),
+                    _NEG)
+    w = e / jnp.expand_dims(jnp.maximum(z, 1e-30), axis)
+    return lse, w
+
+
+def dag_forward_ref(own, corr, start, ok, final, pidx):
+    """Pure-jnp oracle of the general-DAG forward kernel.
+
+    All level-major (B, L, W): ``own`` arc scores (acoustic+lm, _NEG at
+    empty slots), ``corr`` correctness counts, ``start``/``ok``/``final``
+    flags (any numeric/bool dtype; nonzero = set); ``pidx``:
+    (B, L, W, P) int32 predecessor flat positions into the (L*W+1,)
+    level-major buffer (dump slot L*W; see
+    ``losses.lattice.lattice_frontiers``).
+
+    Returns (alpha (B,L,W), c_alpha (B,L,W), logZ (B,), c_avg (B,)) —
+    logZ/c_avg reduced over FINAL arcs (which may sit on any level, unlike
+    the sausage kernels' last-segment contract).
+    """
+
+    def per_utt(own_u, corr_u, start_u, ok_u, final_u, pidx_u):
+        L, W = own_u.shape
+        LW = L * W
+        offs = jnp.arange(L, dtype=jnp.int32) * W
+
+        def step(carry, inp):
+            a_buf, c_buf = carry
+            own_l, corr_l, start_l, ok_l, pidx_l, off = inp
+            pa = a_buf[pidx_l]                                 # (W, P)
+            pc = c_buf[pidx_l]
+            in_log, w = _masked_lse_row(pa)
+            c_in = jnp.sum(w * pc, axis=-1)
+            a_val = jnp.where(start_l, own_l, own_l + in_log)
+            c_val = corr_l + jnp.where(start_l, 0.0, c_in)
+            a_val = jnp.where(ok_l, a_val, _NEG)
+            c_val = jnp.where(ok_l, c_val, 0.0)
+            a_buf = jax.lax.dynamic_update_slice(a_buf, a_val, (off,))
+            c_buf = jax.lax.dynamic_update_slice(c_buf, c_val, (off,))
+            return (a_buf, c_buf), None
+
+        (a_buf, c_buf), _ = jax.lax.scan(
+            step,
+            (jnp.full((LW + 1,), _NEG), jnp.zeros((LW + 1,))),
+            (own_u.astype(jnp.float32), corr_u.astype(jnp.float32),
+             start_u.astype(jnp.float32) > 0.5,
+             ok_u.astype(jnp.float32) > 0.5, pidx_u, offs))
+        fin = (final_u.astype(jnp.float32).reshape(-1) > 0.5)
+        af = jnp.where(fin, a_buf[:LW], _NEG)
+        logz, w = _masked_lse_row(af)
+        cavg = jnp.sum(w * c_buf[:LW])
+        return (a_buf[:LW].reshape(L, W), c_buf[:LW].reshape(L, W),
+                logz, cavg)
+
+    return jax.vmap(per_utt)(own, corr, start, ok, final, pidx)
+
+
+def dag_backward_ref(own, corr, final, ok, sidx):
+    """Pure-jnp oracle of the general-DAG backward kernel: level-major
+    (beta (B,L,W), c_beta (B,L,W)); beta excludes the arc's own score
+    (FBStats convention), so gamma = exp(alpha + beta - logZ)."""
+
+    def per_utt(own_u, corr_u, final_u, ok_u, sidx_u):
+        L, W = own_u.shape
+        LW = L * W
+        okf = ok_u.astype(jnp.float32).reshape(-1) > 0.5
+        own_pad = jnp.concatenate(
+            [jnp.where(okf, own_u.astype(jnp.float32).reshape(-1), _NEG),
+             jnp.full((1,), _NEG)])                            # (LW+1,)
+        corr_pad = jnp.concatenate(
+            [jnp.where(okf, corr_u.astype(jnp.float32).reshape(-1), 0.0),
+             jnp.zeros((1,))])
+        offs = jnp.arange(L - 1, -1, -1, dtype=jnp.int32) * W
+
+        def step(carry, inp):
+            b_buf, cb_buf = carry
+            final_l, ok_l, sidx_l, off = inp
+            s_out = jnp.where(sidx_l < LW,
+                              b_buf[sidx_l] + own_pad[sidx_l], _NEG)
+            sc = cb_buf[sidx_l] + corr_pad[sidx_l]             # (W, S)
+            out_log, w = _masked_lse_row(s_out)
+            c_out = jnp.sum(w * sc, axis=-1)
+            b_val = jnp.where(final_l, 0.0, out_log)
+            c_val = jnp.where(final_l, 0.0, c_out)
+            b_val = jnp.where(ok_l, b_val, _NEG)
+            c_val = jnp.where(ok_l, c_val, 0.0)
+            b_buf = jax.lax.dynamic_update_slice(b_buf, b_val, (off,))
+            cb_buf = jax.lax.dynamic_update_slice(cb_buf, c_val, (off,))
+            return (b_buf, cb_buf), None
+
+        (b_buf, cb_buf), _ = jax.lax.scan(
+            step,
+            (jnp.full((LW + 1,), _NEG), jnp.zeros((LW + 1,))),
+            (final_u.astype(jnp.float32)[::-1] > 0.5,
+             ok_u.astype(jnp.float32)[::-1] > 0.5, sidx_u[::-1], offs))
+        return b_buf[:LW].reshape(L, W), cb_buf[:LW].reshape(L, W)
+
+    return jax.vmap(per_utt)(own, corr, final, ok, sidx)
+
+
+def dag_loss_only_ref(log_probs, start, end, label, lm, corr, arc_mask,
+                      is_start, is_final, level_arcs, pidx, *,
+                      kappa: float = 1.0):
+    """Oracle of the fused general-DAG loss-only kernel: in-graph score
+    construction, arc->level-major gather, and the forward-only DAG
+    recursion with final-arc reduction, returning (logZ (B,), c_avg (B,)).
+    Lattice fields in arc layout (B, A); level_arcs (B, L, W) and pidx
+    (B, L, W, P) from ``losses.lattice.lattice_frontiers``."""
+    score_arc = sausage_arc_scores_ref(log_probs, start, end, label, kappa) \
+        + lm.astype(jnp.float32)                              # (B, A)
+    own = gather_sausage_ref(score_arc, level_arcs, _NEG)
+    co = gather_sausage_ref(corr.astype(jnp.float32), level_arcs, 0.0)
+    ok = gather_sausage_ref(arc_mask.astype(jnp.float32), level_arcs, 0.0)
+    st = gather_sausage_ref(is_start.astype(jnp.float32), level_arcs,
+                            0.0) * ok
+    fin = gather_sausage_ref(is_final.astype(jnp.float32), level_arcs,
+                             0.0) * ok
+    _, _, logz, cavg = dag_forward_ref(own, co, st, ok, fin, pidx)
+    return logz, cavg
+
+
 def cg_fused_update_ref(alpha, x, v, r, bv):
     xf = x.astype(jnp.float32)
     vf = v.astype(jnp.float32)

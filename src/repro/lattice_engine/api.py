@@ -20,15 +20,21 @@ Backends (all produce the same arc-layout ``FBStats``):
   * ``"scan"``      — per-arc ``lax.scan`` reference (O(A) sequential steps)
   * ``"levelized"`` — level-parallel scan over ``Lattice.level_arcs``
                       frontiers (O(levels) sequential steps)
-  * ``"pallas"``    — TPU sausage kernel pair behind a ``custom_jvp``
-                      (only valid for confusion-network topologies)
-  * ``"auto"``      — Pallas when the lattice is statically known to be a
-                      sausage and the default JAX backend is TPU; the
-                      levelized scan otherwise.  Inside ``jit`` the arrays
-                      are tracers, topology cannot be inspected, and auto
-                      resolves to the levelized scan — pass
-                      ``backend="pallas"`` explicitly (or resolve outside
-                      the jit boundary) to commit to the kernel path.
+  * ``"pallas"``    — TPU kernels behind a ``custom_jvp``, for ANY
+                      topology: statically-known sausage (confusion-
+                      network) lattices run the specialised fully-
+                      connected segment kernels; every other DAG — and
+                      any traced lattice — runs the general-DAG frontier
+                      kernels (level-major scores + predecessor/successor
+                      positions).  Never falls back to a scan backend.
+  * ``"auto"``      — Pallas when the default JAX backend is TPU and the
+                      lattice is levelized (``level_arcs`` present) and
+                      concrete; the levelized scan otherwise.  Inside
+                      ``jit`` the arrays are tracers and auto resolves to
+                      the levelized scan — pass ``backend="pallas"``
+                      explicitly (or resolve outside the jit boundary) to
+                      commit to the kernel path (the pallas backend
+                      handles traced lattices via the DAG kernels).
                       ``REPRO_LATTICE_BACKEND`` overrides auto everywhere.
 """
 from __future__ import annotations
@@ -68,7 +74,10 @@ def resolve_backend(backend: str, lat: Lattice) -> str:
             raise ValueError(
                 f"REPRO_LATTICE_BACKEND={forced!r} not in {BACKENDS}")
         return forced
-    if jax.default_backend() == "tpu" and lattice_is_sausage(lat):
+    if jax.default_backend() == "tpu" and lat.level_arcs is not None \
+            and not isinstance(lat.level_arcs, jax.core.Tracer):
+        # any topology: the pallas backend dispatches sausage vs DAG
+        # kernels internally (lattice_is_sausage)
         return "pallas"
     return "levelized"
 
@@ -79,15 +88,38 @@ def lattice_stats(lat: Lattice, log_probs, kappa: float,
     """Differentiable lattice forward-backward statistics (one API over
     the scan / levelized / Pallas backends).
 
-    ``mesh``: optional ``jax.sharding.Mesh`` — the (B, A) arc tensors
-    (scores, alpha/beta/gamma, correctness accumulators) are then
-    ``with_sharding_constraint``-ed to its data axes so the statistics
-    stage stays GSPMD data-parallel under pjit (see
-    ``launch.sharding.lattice_shardings`` for the input side).
+    Args:
+      lat: batched ``losses.lattice.Lattice`` (any DAG topology; every
+        backend honours ``arc_mask`` ragged-batch padding).  The
+        levelized and Pallas backends need ``lat.level_arcs``
+        (``batch_lattices`` builds it).
+      log_probs: (B, T, K) frame log-probabilities (``log_softmax`` of
+        the acoustic logits) — the only differentiable input;
+        ``jax.grad``/``jax.jvp`` through the returned ``logZ``/``c_avg``
+        are exact on every backend (the Pallas kernels sit behind
+        ``custom_jvp`` occupancy identities).
+      kappa: acoustic scale (may be traced; it is linear in the score
+        construction on every backend).
+      backend: ``"scan" | "levelized" | "pallas" | "auto"`` — see module
+        docstring.  ``"pallas"`` supports ANY topology (sausage kernels
+        for statically-known confusion networks, general-DAG frontier
+        kernels otherwise; never a scan fallback).
+      mesh: optional ``jax.sharding.Mesh`` — the (B, A) arc tensors
+        (scores, alpha/beta/gamma, correctness accumulators) are then
+        ``with_sharding_constraint``-ed to its data axes so the
+        statistics stage stays GSPMD data-parallel under pjit (see
+        ``launch.sharding.lattice_shardings`` for the input side).
+      accumulators: ``"full"`` -> ``FBStats`` (alpha, beta, gamma,
+        correctness accumulators, logZ, c_avg — arc layout (B, A));
+        ``"loss_only"`` -> ``LossStats(logZ, c_avg)`` with the backward
+        recursion (and, on the Pallas backend, all per-arc statistics)
+        elided — the CG candidate-evaluation fast path.
 
-    ``accumulators``: ``"full"`` -> ``FBStats``; ``"loss_only"`` ->
-    ``LossStats(logZ, c_avg)`` with the backward recursion (and, on the
-    Pallas backend, all per-arc statistics) elided — see module docstring.
+    Returns:
+      ``FBStats`` or ``LossStats`` (see ``lattice_engine.common``); on
+      the Pallas backend only ``logZ``/``c_avg`` carry gradients — the
+      per-arc statistics are constants (losses only differentiate the
+      former; tested equal to the scan backend's autodiff).
     """
     check_accumulators(accumulators)
     return _DISPATCH[resolve_backend(backend, lat)](

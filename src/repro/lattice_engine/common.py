@@ -2,9 +2,11 @@
 log-semiring helpers, and the final reduction from (alpha, beta) to
 (logZ, gamma, c_avg).
 
-Every backend (per-arc scan, levelized scan, Pallas sausage kernels)
-produces the same ``FBStats`` in arc layout (B, A), so losses and tests
-are backend-agnostic.
+Every backend (per-arc scan, levelized scan, Pallas kernels — sausage
+AND general-DAG, topology-dispatched in ``pallas_backend``) produces the
+same ``FBStats`` in arc layout (B, A), so losses and tests are
+backend-agnostic.  ``lattice_is_sausage`` below is the static topology
+check that picks between the two Pallas kernel families.
 """
 from __future__ import annotations
 

@@ -127,6 +127,22 @@ def build_sequence_step(acfg, opt_spec, *,
     """One uniform update for lattice-based sequence training — any
     optimiser, the paper's actual SGD/Adam-vs-NGHF comparison included.
 
+    Args:
+      acfg: acoustic model config (``configs.acoustic``).
+      opt_spec: optimiser registry name ("sgd" | "adam" | "ng" | "hf" |
+        "nghf") or an already-built config dataclass; ``opt_overrides``
+        are forwarded to ``optim.get_optimizer``.
+      loss: "mpe" | "mmi" | "ce" (``losses.sequence.get_loss``).
+      kappa: acoustic scale of the lattice losses.
+      backend: lattice-engine backend for the statistics stage —
+        "scan" | "levelized" | "pallas" | "auto".  Any lattice DAG
+        topology works on every backend ("pallas" dispatches sausage vs
+        general-DAG kernels internally; under jit the lattice is traced,
+        so "pallas" always runs the general-DAG frontier kernels while
+        "auto" resolves to the levelized scan — see
+        ``lattice_engine.api``).
+      mesh / state_sharding / share_counts: GSPMD placement — see below.
+
     Returns ``(step, opt)`` with ``step(params, opt_state, grad_batch,
     cg_batch=None) -> (params, opt_state, metrics)`` where both batches
     come from ``data.synthetic.asr_batch`` (feats + labels + a

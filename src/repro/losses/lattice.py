@@ -27,6 +27,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -78,6 +79,65 @@ def lattice_frame_mask(lat: Lattice) -> jnp.ndarray:
     t = jnp.arange(lat.num_frames)
     counts = lattice_frame_counts(lat)
     return (t[None, :] < counts[:, None]).astype(jnp.float32)
+
+
+class Frontiers(NamedTuple):
+    """Levelized frontier tensors in KERNEL layout — what the general-DAG
+    Pallas kernels (``kernels.lattice_fb.dag_forward``/``dag_backward``/
+    ``dag_loss_only``) consume.  Positions are *level-major*: arc at slot
+    ``(l, w)`` of ``level_arcs`` lives at flat position ``l*W + w``; one
+    extra "dump" slot at position ``L*W`` absorbs -1 pads and masked arcs
+    so every gather is a fixed-shape dense op.
+    """
+
+    arc_pos: jnp.ndarray   # (B, A+1) int32: arc id -> flat level-major
+    #                         position (dump L*W for pads/masked arcs)
+    pidx: jnp.ndarray      # (B, L, W, P) int32: predecessor positions
+    sidx: jnp.ndarray      # (B, L, W, S) int32: successor positions
+    ok: jnp.ndarray        # (B, L, W) bool: slot holds a valid arc
+    start: jnp.ndarray     # (B, L, W) bool: slot holds a start arc
+    final: jnp.ndarray     # (B, L, W) bool: slot holds a final arc
+
+
+def _frontiers_single(level_arcs, preds, succs, is_start, is_final,
+                      arc_mask):
+    """Unbatched frontier-tensor construction (see ``lattice_frontiers``)."""
+    L, W = level_arcs.shape
+    A = preds.shape[0]
+    flat = level_arcs.reshape(-1)                              # (L*W,)
+    safe = jnp.where(flat >= 0, flat, A)
+    arc_pos = jnp.full((A + 1,), L * W, jnp.int32).at[safe].set(
+        jnp.where(flat >= 0, jnp.arange(L * W, dtype=jnp.int32), L * W))
+    safe_arc = jnp.maximum(level_arcs, 0)
+    ok = (level_arcs >= 0) & arc_mask[safe_arc]
+    start = ok & is_start[safe_arc]
+    final = ok & is_final[safe_arc]
+    p = preds[safe_arc]                                        # (L, W, P)
+    pidx = jnp.where(p >= 0, arc_pos[jnp.maximum(p, 0)], L * W)
+    s = succs[safe_arc]                                        # (L, W, S)
+    sidx = jnp.where(s >= 0, arc_pos[jnp.maximum(s, 0)], L * W)
+    return arc_pos, pidx, sidx, ok, start, final
+
+
+def lattice_frontiers(lat: "Lattice") -> Frontiers:
+    """Build the levelized frontier tensors of a batched lattice in the
+    Pallas kernels' level-major layout.
+
+    Pure integer/boolean jnp ops on the static lattice fields (cheap, and
+    traceable under jit), batched over B.  ``level_arcs`` must be present
+    (``batch_lattices`` builds it); masked arcs never appear in
+    ``level_arcs`` (``levelize_arcs`` excludes them), so ``arc_pos`` maps
+    them — like -1 pads — to the dump slot.
+    """
+    if lat.level_arcs is None:
+        raise ValueError(
+            "lattice_frontiers needs Lattice.level_arcs; build batches "
+            "with repro.losses.lattice.batch_lattices")
+    arc_pos, pidx, sidx, ok, start, final = jax.vmap(_frontiers_single)(
+        lat.level_arcs, lat.preds, lat.succs, lat.is_start, lat.is_final,
+        lat.arc_mask)
+    return Frontiers(arc_pos=arc_pos, pidx=pidx, sidx=sidx, ok=ok,
+                     start=start, final=final)
 
 
 def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,

@@ -281,32 +281,154 @@ def test_fused_loss_only_kernel_matches_ref():
                                atol=1e-4)
 
 
-@pytest.mark.parametrize("seed", [0, 1, 2])
-def test_random_dag_scan_levelized_agree(seed):
-    """The levelized backend's generality claim: agreement with the
-    per-arc reference on NON-sausage DAGs (variable fan-in/out, skip
-    arcs), both uniform and ragged/padded batches."""
+def _dag_batch(seed, B=3, T=24, max_arcs=80):
+    """Random general-DAG batch: skip arcs, variable fan-in/out, ragged
+    arc-count padding (max_arcs) — the topology the sausage kernels
+    reject."""
     rng = np.random.default_rng(seed)
-    T = 24
     lats = [make_random_dag_lattice(rng, num_frames=T, num_states=K,
-                                    max_arcs=80) for _ in range(3)]
+                                    max_arcs=max_arcs) for _ in range(B)]
     lat = batch_lattices(lats)
-    assert not lattice_is_sausage(lat)
     lp = jax.nn.log_softmax(
-        jax.random.normal(jax.random.PRNGKey(seed + 300), (3, T, K)), -1)
+        jax.random.normal(jax.random.PRNGKey(seed + 300), (B, T, K)), -1)
+    return lat, lp
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("backend", ["levelized", "pallas"])
+def test_random_dag_backends_agree(seed, backend):
+    """The generality claim for the fast backends: agreement with the
+    per-arc reference on NON-sausage DAGs (variable fan-in/out, skip
+    arcs, ragged/padded batches) — for the Pallas backend this pins the
+    general-DAG frontier kernels (never a scan fallback)."""
+    lat, lp = _dag_batch(seed)
+    assert not lattice_is_sausage(lat)
     want = lattice_stats(lat, lp, kappa=0.8, backend="scan")
-    got = lattice_stats(lat, lp, kappa=0.8, backend="levelized")
+    got = lattice_stats(lat, lp, kappa=0.8, backend=backend)
     for field in ARC_FIELDS + UTT_FIELDS:
         np.testing.assert_allclose(
             np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
-            atol=1e-4, err_msg=f"levelized.{field} (seed={seed})")
+            atol=1e-4, err_msg=f"{backend}.{field} (seed={seed})")
     # gradients agree too (the engine is differentiated in training)
     g_scan = jax.grad(lambda l: jnp.sum(lattice_stats(
         lat, l, 0.8, backend="scan").logZ))(lp)
-    g_lev = jax.grad(lambda l: jnp.sum(lattice_stats(
-        lat, l, 0.8, backend="levelized").logZ))(lp)
-    np.testing.assert_allclose(np.asarray(g_lev), np.asarray(g_scan),
+    g = jax.grad(lambda l: jnp.sum(lattice_stats(
+        lat, l, 0.8, backend=backend).logZ))(lp)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_scan),
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("accumulators", ["full", "loss_only"])
+def test_dag_pallas_grad_jvp_fd(accumulators):
+    """jax.grad AND jax.jvp through the DAG Pallas custom_jvp == scan
+    autodiff, and the grad passes a central finite-difference check —
+    both statistics modes (the fused DAG loss-only kernel included)."""
+    lat, lp = _dag_batch(7, B=2)
+
+    def f(lp_, be):
+        st = lattice_stats(lat, lp_, 0.8, backend=be,
+                           accumulators=accumulators)
+        return jnp.sum(st.logZ) + jnp.sum(st.c_avg)
+
+    g_scan = jax.grad(lambda l: f(l, "scan"))(lp)
+    g_pal = jax.grad(lambda l: f(l, "pallas"))(lp)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_scan),
+                               atol=2e-5)
+    d = jax.random.normal(jax.random.PRNGKey(31), lp.shape)
+    _, jv_scan = jax.jvp(lambda l: f(l, "scan"), (lp,), (d,))
+    _, jv_pal = jax.jvp(lambda l: f(l, "pallas"), (lp,), (d,))
+    assert abs(float(jv_pal) - float(jv_scan)) < 1e-4
+    eps = 1e-2                      # f32 round-off dominates below ~3e-3
+    fd = (f(lp + eps * d, "pallas") - f(lp - eps * d, "pallas")) / (2 * eps)
+    assert abs(float(fd) - float(jnp.vdot(g_pal, d))) < 1e-3
+
+
+def test_dag_pallas_no_silent_fallback(monkeypatch):
+    """backend="pallas" on a general DAG must run the DAG kernels — not
+    raise, and not silently reroute to a scan backend."""
+    from repro.lattice_engine import pallas_backend
+    lat, lp = _dag_batch(4)
+    assert not lattice_is_sausage(lat)
+    calls = {"dag": 0}
+    real = pallas_backend.dag_forward
+
+    def spy(*a, **kw):
+        calls["dag"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pallas_backend, "dag_forward", spy)
+    st = lattice_stats(lat, lp, 1.0, backend="pallas")
+    assert calls["dag"] > 0
+    np.testing.assert_allclose(
+        np.asarray(st.logZ),
+        np.asarray(lattice_stats(lat, lp, 1.0, backend="scan").logZ),
+        atol=1e-4)
+
+
+@pytest.mark.parametrize("accumulators", ["full", "loss_only"])
+def test_dag_pallas_under_jit(accumulators):
+    """Traced lattices route through the DAG kernels (topology cannot be
+    inspected inside jit) for sausage AND DAG batches, both modes."""
+    for lat, lp in (_dag_batch(2), _uniform_batch(2)):
+        want = np.asarray(lattice_stats(lat, lp, 0.8, backend="scan").logZ)
+        got = jax.jit(lambda l, lp_: lattice_stats(
+            l, lp_, 0.8, backend="pallas",
+            accumulators=accumulators).logZ)(lat, lp)
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+
+
+def test_dag_kernels_match_refs():
+    """The general-DAG Pallas kernel pair and the fused DAG loss-only
+    kernel == their pure-jnp oracles on a ragged DAG batch."""
+    from repro.losses.lattice import lattice_frontiers
+    lat, lp = _dag_batch(9)
+    fr = lattice_frontiers(lat)
+    am = arc_scores(lat, lp, 0.8) + lat.lm
+    own = ref.gather_sausage_ref(am, lat.level_arcs, -1e30)
+    corr = ref.gather_sausage_ref(lat.corr, lat.level_arcs, 0.0)
+    st = fr.start.astype(jnp.float32)
+    ok = fr.ok.astype(jnp.float32)
+    fin = fr.final.astype(jnp.float32)
+    for got, want in zip(
+            ops.dag_forward(own, corr, st, ok, fin, fr.pidx),
+            ref.dag_forward_ref(own, corr, st, ok, fin, fr.pidx)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+    for got, want in zip(
+            ops.dag_backward(own, corr, fin, ok, fr.sidx),
+            ref.dag_backward_ref(own, corr, fin, ok, fr.sidx)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+    args = (lp, lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+            lat.arc_mask, lat.is_start, lat.is_final, lat.level_arcs,
+            fr.pidx)
+    got = ops.dag_loss_only(*args, kappa=0.8, use_pallas=True)
+    want = ref.dag_loss_only_ref(*args, kappa=0.8)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4)
+    full = lattice_stats(lat, lp, 0.8, backend="scan")
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(full.logZ),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(full.c_avg),
+                               atol=1e-4)
+
+
+def test_dag_pallas_padded_arcs_zero_cotangent():
+    """Ragged DAG batches: gradients through the DAG Pallas path put
+    exactly zero cotangent on padded arc scores (lat.lm), both modes."""
+    lat, lp = _dag_batch(6)
+    pad = ~np.asarray(lat.arc_mask)
+    assert pad.any()
+    for acc in ("full", "loss_only"):
+        def f(lm):
+            st = lattice_stats(lat._replace(lm=lm), lp, 1.0,
+                               backend="pallas", accumulators=acc)
+            return jnp.sum(st.logZ) + jnp.sum(st.c_avg)
+
+        g = np.asarray(jax.grad(f)(lat.lm))
+        assert np.isfinite(g).all(), acc
+        assert np.abs(g[pad]).max() == 0.0, acc
+        assert np.abs(g[~pad]).max() > 0.0, acc
 
 
 def test_forward_backward_shim_matches_engine():
