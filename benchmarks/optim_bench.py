@@ -4,18 +4,39 @@ Times ONE jitted update (post-compile) of each registered optimiser on
 the paper's workload — LSTM acoustic model + lattice MPE — through
 ``launch.steps.build_sequence_step``, i.e. exactly what the training
 driver executes per step.  Second-order rows use the same gradient/CG
-batch geometry; ``nghf`` is measured both cold and with CG warm-starting
-(``warm_start`` costs one extra curvature product per update for the true
-residual — this row keeps that overhead visible across commits).
+batch geometry; ``nghf`` is measured cold, warm-started, and with each
+CG-stage cost lever engaged:
+
+  * ``nghf_sampled``       — GN/Fisher products on half the CG batch
+                             (``curvature_sample=0.5``; candidate eval
+                             stays full-batch).
+  * ``nghf_fused``         — per-iteration vector work through the fused
+                             flat-buffer kernel (``cg_fused=True``).
+  * ``nghf_adaptive``      — relative-improvement stopping
+                             (``cg_tol``; ``cg_iters`` as ceiling).
+  * ``nghf_warm_adaptive`` — warm start + adaptive budget: the warm
+                             start now shows up as FEWER iterations
+                             (``cg_iters_used`` in the JSON row) instead
+                             of the old always-pay-the-ceiling regression.
+  * ``nghf_fast``          — all levers together.
 
 Emits the standard CSV rows plus one JSON row per optimiser:
 
-    {"bench": "optim_update", "optimizer": "nghf", "warm_start": true,
-     "B": 32, "cg_B": 8, "T": 32, "ms_per_update": 123.4}
+    {"bench": "optim_update", "optimizer": "nghf_fast", ...,
+     "ms_per_update": 61.2, "cg_iters_used": 3, "cg_best_loss": -0.41}
+
+and a per-phase CG-stage cost breakdown (paper Table 1's decomposition):
+
+    {"bench": "cg_phase", "phase": "curvature_product",
+     "curvature_sample": 1.0, "ms": 5.1}
+
+phases: ``curvature_product`` (one GN product, at sample 1.0 and 0.5),
+``candidate_eval`` (one loss-only evaluation on the full CG batch) and
+``vector_work`` (one x/r/rr iteration update, fused vs unfused).
 
 ``--json-out BENCH_lattice.json`` MERGES these rows into the existing
 lattice-engine trajectory file (same CI artifact), replacing any previous
-``optim_update`` rows.
+``optim_update`` / ``cg_phase`` rows.
 """
 from __future__ import annotations
 
@@ -23,6 +44,7 @@ import json
 import os
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.configs.acoustic import LSTM
@@ -42,7 +64,73 @@ CONFIGS = [
     ("nghf", "nghf", {"cg_iters": 6, "ng_iters": 3}),
     ("nghf_warm", "nghf", {"cg_iters": 6, "ng_iters": 3,
                            "warm_start": True}),
+    ("nghf_sampled", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                              "curvature_sample": 0.5}),
+    ("nghf_fused", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                            "cg_fused": True}),
+    ("nghf_adaptive", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                               "cg_tol": 0.2}),
+    ("nghf_warm_adaptive", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                                    "warm_start": True, "cg_tol": 0.2}),
+    ("nghf_fast", "nghf", {"cg_iters": 6, "ng_iters": 3,
+                           "warm_start": True, "cg_tol": 0.2,
+                           "curvature_sample": 0.5, "cg_fused": True}),
 ]
+
+
+def phase_breakdown(cfg, params, counts, cb):
+    """Per-phase CG-stage costs (paper Table 1): ONE curvature product,
+    ONE candidate evaluation, ONE iteration of vector work — each jitted
+    standalone so the row isolates that phase's wall time."""
+    from repro.core import tree_math as tm
+    from repro.core.curvature import make_curvature_ops
+    from repro.kernels import ops as kernel_ops
+    from repro.losses.sequence import get_loss
+
+    loss_spec = get_loss("mpe", kappa=0.5)
+    fwd = lambda p, b: (acoustic.forward(cfg, p, b["feats"]), 0.0)  # noqa
+    v = jax.tree.map(lambda x: jnp.ones_like(x) * 1e-3, params)
+    rows = []
+
+    for frac in (1.0, 0.5):
+        ops_f = make_curvature_ops(fwd, loss_spec, params, cb,
+                                   eval_accumulators="loss_only",
+                                   curvature_sample=frac)
+        us = time_call(jax.jit(ops_f.gnvp), v, warmup=1, iters=3)
+        emit(f"cg_phase.curvature_product.s{frac}", us, f"ms={us / 1e3:.3f}")
+        rows.append({"bench": "cg_phase", "phase": "curvature_product",
+                     "curvature_sample": frac, "cg_B": BATCH_CG,
+                     "ms": round(us / 1e3, 4)})
+        if frac == 1.0:
+            us = time_call(jax.jit(ops_f.eval_loss), v, warmup=1, iters=3)
+            emit("cg_phase.candidate_eval.loss_only", us,
+                 f"ms={us / 1e3:.3f}")
+            rows.append({"bench": "cg_phase", "phase": "candidate_eval",
+                         "accumulators": "loss_only", "cg_B": BATCH_CG,
+                         "ms": round(us / 1e3, 4)})
+
+    # vector work: one x/r/rr update on a θ-sized flat buffer
+    from jax.flatten_util import ravel_pytree
+    flat, _ = ravel_pytree(params)
+    n = flat.size
+    key = jax.random.PRNGKey(1)
+    x, vv, r, bv = (jax.random.normal(jax.random.fold_in(key, i), (n,))
+                    for i in range(4))
+
+    def unfused(alpha, x, vv, r, bv):
+        xn = tm.axpy(alpha, vv, x)
+        rn = tm.axpy(-alpha, bv, r)
+        return xn, rn, tm.vdot(rn, rn)
+
+    for name, fn in (("fused", jax.jit(kernel_ops.cg_fused_update)),
+                     ("unfused", jax.jit(unfused))):
+        us = time_call(fn, jnp.float32(0.3), x, vv, r, bv,
+                       warmup=2, iters=5)
+        emit(f"cg_phase.vector_work.{name}", us, f"ms={us / 1e3:.3f}")
+        rows.append({"bench": "cg_phase", "phase": "vector_work",
+                     "variant": name, "n": int(n),
+                     "ms": round(us / 1e3, 4)})
+    return rows
 
 
 def run(budget: str = "small", json_out: str | None = None):
@@ -61,9 +149,12 @@ def run(budget: str = "small", json_out: str | None = None):
         step = jax.jit(step_fn)
         state = opt.init(params)
         cg = cb if opt.uses_cg_batch else None
-        # warm the state so the warm-start row times a REAL warm start
-        # (x0 != 0), not the first cold update
-        p, state, _ = step(params, state, gb, cg)
+        # warm the state so the warm-start rows time a SETTLED warm start
+        # (x0 != 0 and, under cg_tol, the adaptive budget at its
+        # steady-state iteration count), not the first cold update
+        p = params
+        for _ in range(3):
+            p, state, _ = step(p, state, gb, cg)
         us = time_call(lambda: step(p, state, gb, cg), warmup=1, iters=3)
         rows.append(emit(f"optim_update.{label}", us,
                          f"ms_per_update={us / 1e3:.3f}"))
@@ -71,8 +162,20 @@ def run(budget: str = "small", json_out: str | None = None):
                "warm_start": bool(overrides.get("warm_start", False)),
                "B": BATCH_GRAD, "cg_B": BATCH_CG, "T": FRAMES,
                "ms_per_update": round(us / 1e3, 4)}
+        for k, val in overrides.items():
+            if k in ("curvature_sample", "cg_tol", "cg_fused"):
+                rec[k] = val
+        if opt.uses_cg_batch:
+            # the warm-start satellite's proof: adaptive rows record how
+            # many CG iterations the update actually spent and where the
+            # candidate selection landed
+            _, _, m = step(p, state, gb, cg)
+            rec["cg_iters_used"] = int(m["cg_iters_used"])
+            rec["cg_best_loss"] = round(float(m["cg_best_loss"]), 6)
         json_rows.append(rec)
         print(json.dumps(rec))
+
+    json_rows += phase_breakdown(cfg, params, counts, cb)
 
     if json_out:
         # merge into the shared trajectory file (one CI artifact for both
@@ -83,7 +186,8 @@ def run(budget: str = "small", json_out: str | None = None):
             with open(json_out) as f:
                 doc = json.load(f)
         doc["rows"] = [r for r in doc.get("rows", [])
-                       if r.get("bench") != "optim_update"] + json_rows
+                       if r.get("bench") not in ("optim_update", "cg_phase")
+                       ] + json_rows
         with open(json_out, "w") as f:
             json.dump(doc, f, indent=1)
         print(f"# merged {len(json_rows)} optim rows into {json_out}")

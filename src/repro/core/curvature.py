@@ -41,15 +41,42 @@ class CurvatureOps(NamedTuple):
 
     gnvp: Callable        # v -> G v      (Gauss-Newton)
     fvp: Callable         # v -> F v      (empirical Fisher, from MMI/CE)
-    eval_loss: Callable   # delta -> loss(params + delta) on the CG batch
-    logits: jnp.ndarray   # primal logits on the CG batch
+    eval_loss: Callable   # delta -> loss(params + delta) on the FULL
+    #                       CG batch (never subsampled)
+    logits: jnp.ndarray   # primal logits on the curvature batch
+
+
+def subsample_batch(batch, fraction: float):
+    """Deterministic leading-dim prefix of a batch pytree.
+
+    Keeps ``max(1, round(B * fraction))`` utterances of every
+    batch-leading field (same leading-dim heuristic as
+    ``launch.steps.cg_sub_batch``), everything else untouched.  The CG
+    batch is itself drawn randomly from the whole training set
+    (Sec. 4.1), so a static prefix is an unbiased sample — and being a
+    static slice it stays jit-friendly (no gather, no recompile per
+    step)."""
+    arrs = [x for x in jax.tree.leaves(batch)
+            if hasattr(x, "ndim") and x.ndim >= 1]
+    B = arrs[0].shape[0]
+    n = max(1, int(round(B * float(fraction))))
+    if n >= B:
+        return batch
+
+    def slc(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == B:
+            return x[:n]
+        return x
+
+    return jax.tree.map(slc, batch)
 
 
 def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
                        stabilize: bool = True,
                        theta_norm=None,
                        mode: str = "rematvp",
-                       eval_accumulators: str = "full") -> CurvatureOps:
+                       eval_accumulators: str = "full",
+                       curvature_sample: float = 1.0) -> CurvatureOps:
     """forward_fn(params, batch) -> (logits, aux).
 
     eval_accumulators: statistics mode for ``eval_loss`` (the per-CG-
@@ -57,6 +84,18 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
     its value-only fast path (lattice losses skip the backward recursion
     / run the fused Pallas kernel); "full" keeps the default statistics
     set.  The gradient/curvature products are unaffected either way.
+
+    curvature_sample: fraction of the CG batch the GN/Fisher products
+    run on (Sainath et al. 2013, "implicit preconditioning and
+    sampling": curvature estimates tolerate far smaller batches than
+    candidate ranking does).  The sample is a deterministic prefix
+    (``subsample_batch``); ``eval_loss`` ALWAYS sees the full CG batch —
+    Alg. 1's candidate selection keeps its cheap fused loss-only
+    evaluation at full fidelity while every JVP/VJP pair shrinks by the
+    sample factor.  1.0 (default) is bit-identical to the unsampled
+    path (the batch object is passed through untouched).  Schedulable
+    across outer iterations by rebuilding the step (shapes are static
+    under jit) — ``launch.train --curvature-sample-schedule``.
 
     mode="linearize": linearize ONCE and reuse residuals across CG
     iterations — fastest, but holds every forward intermediate of the CG
@@ -68,9 +107,11 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
     only live tensors, reverse-mode under remat stores only layer carries.
     ~1.7x compute per CG iteration, O(30x) less resident memory.
     """
+    curv_batch = (batch if curvature_sample >= 1.0
+                  else subsample_batch(batch, curvature_sample))
 
     def f(p):
-        return forward_fn(p, batch)[0]
+        return forward_fn(p, curv_batch)[0]
 
     if mode == "linearize":
         logits, jvp_fn = jax.linearize(f, params)
@@ -103,11 +144,11 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
         if mode == "linearize":
             out_primal = logits
             jv = jvp_fn(v_in)
-            hu = factor_vp(out_primal, batch, jv)
+            hu = factor_vp(out_primal, curv_batch, jv)
             (out,) = vjp_fn(hu)
         else:
             out_primal, jv = jax.jvp(f, (params,), (v_in,))
-            hu = factor_vp(out_primal, batch, jv)
+            hu = factor_vp(out_primal, curv_batch, jv)
             _, pullback = jax.vjp(f, params)
             (out,) = pullback(hu)
         return tm.scale(out, 1.0 / s) if stabilize else out

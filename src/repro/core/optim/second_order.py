@@ -56,8 +56,28 @@ from repro.core.optim.preconditioners import get_preconditioner
 @dataclass(frozen=True)
 class SecondOrderConfig:
     method: str = "nghf"          # ng | hf | nghf
-    cg_iters: int = 8             # outer CG iterations (paper: 5-8)
+    cg_iters: int = 8             # outer CG iterations (paper: 5-8); with
+                                  # cg_tol > 0 this is the CEILING of the
+                                  # adaptive budget
     ng_iters: int = 4             # inner Fisher-CG iterations for NGHF
+    cg_tol: float = 0.0           # adaptive CG budget: stop once the
+                                  # quadratic model's relative per-
+                                  # iteration gain drops below this
+                                  # (Martens 2010); 0 keeps the fixed
+                                  # budget bit-for-bit.  Applies to the
+                                  # outer solve AND the inner NG solve.
+    cg_min_iters: int = 1         # floor before cg_tol may fire
+    cg_fused: bool = False        # fused flat-buffer CG vector work
+                                  # (kernels/cg_fused.py: one launch for
+                                  # x+=αv, r-=αBv, <r,r>); single-chip
+                                  # lever — auto-disabled under a mesh
+                                  # (state_sharding), where the pytree
+                                  # constraints must stay per-leaf
+    curvature_sample: float = 1.0  # fraction of the CG batch used for the
+                                  # GN/Fisher products (Sainath-style
+                                  # sampling); candidate evaluation always
+                                  # keeps the FULL CG batch.  1.0 is
+                                  # bit-identical to the unsampled path.
     lam: float = 1.0              # λ, KL trust multiplier on F (Eqn. 17)
     damping: float = 0.0          # Tikhonov η (baseline; paper avoids it)
     ng_damping: float = 1.0       # inner-Fisher-solve damping for NGHF: the
@@ -185,9 +205,15 @@ class SecondOrderOptimizer(Optimizer):
                                  cg_batch, stabilize=cfg.stabilize,
                                  theta_norm=theta_norm,
                                  mode=cfg.curvature_mode,
-                                 eval_accumulators=cfg.eval_accumulators)
+                                 eval_accumulators=cfg.eval_accumulators,
+                                 curvature_sample=cfg.curvature_sample)
         precond = self.precond.apply_fn(pstate)
         lam = state["lam"] if cfg.adapt_lam else cfg.lam
+        # fused CG is the single-chip fast path: under a mesh the CG
+        # carries must remain pytrees so the per-leaf sharding
+        # constraints apply (flat buffers would force an all-gather)
+        solve_kw = dict(tol=cfg.cg_tol, min_iters=cfg.cg_min_iters,
+                        fused=cfg.cg_fused and ss is None)
 
         def _st(t):
             """Match the CG state storage dtype (bf16 state keeps scan
@@ -214,14 +240,14 @@ class SecondOrderOptimizer(Optimizer):
                            eval_fn=ops.eval_loss if cfg.eval_candidates
                            else None,
                            damping=cfg.damping, eval_every=cfg.eval_every,
-                           constrain=constrain, x0=x0)
+                           constrain=constrain, x0=x0, **solve_kw)
         elif cfg.method == "hf":
             res = cg_solve(gnvp, b,
                            iters=cfg.cg_iters, precond=precond,
                            eval_fn=ops.eval_loss if cfg.eval_candidates
                            else None,
                            damping=cfg.damping, eval_every=cfg.eval_every,
-                           constrain=constrain, x0=x0)
+                           constrain=constrain, x0=x0, **solve_kw)
         else:
             # inner solve: (λF + ηI) d = -∇L  (NG direction, no candidate
             # eval — it only forms the RHS of the regulated problem,
@@ -230,16 +256,17 @@ class SecondOrderOptimizer(Optimizer):
                              iters=cfg.ng_iters, precond=precond,
                              eval_fn=None,
                              damping=max(cfg.damping, cfg.ng_damping),
-                             constrain=constrain)
+                             constrain=constrain, **solve_kw)
             ng_dir = inner.x
             diag["ng_quad"] = inner.quad
+            diag["ng_iters_used"] = inner.iters_used
             # outer solve: G Δθ = NG direction  (Sec. 6.2)
             res = cg_solve(gnvp, ng_dir,
                            iters=cfg.cg_iters, precond=precond,
                            eval_fn=ops.eval_loss if cfg.eval_candidates
                            else None,
                            damping=cfg.damping, eval_every=cfg.eval_every,
-                           constrain=constrain, x0=x0)
+                           constrain=constrain, x0=x0, **solve_kw)
 
         delta = tm.scale(res.x, cfg.step_scale)
         accepted = jnp.asarray(True)
@@ -291,6 +318,7 @@ class SecondOrderOptimizer(Optimizer):
             cg_best_iter=res.best_iter, cg_best_loss=res.best_loss,
             cg_quad=res.quad, cg_resid=res.resid, cg_curv=res.curv,
             cg_losses=res.losses, cg_accepted=accepted,
+            cg_iters_used=res.iters_used,
             opt_step=new_state["step"], **diag)
         return new_params, new_state, metrics
 

@@ -98,7 +98,18 @@ def dag_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
                                  pidx, kappa=kappa, interpret=None)
 
 
-def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool = True):
+def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool | None = None):
+    """Fused CG vector update: x+αv, r−αBv and the exact blockwise <r,r>
+    reduction in one pass over flat (N,) buffers.
+
+    ``use_pallas=None`` (the default, what ``core.cg.cg_solve(fused=True)``
+    uses) auto-dispatches: the Pallas kernel where it compiles (TPU, or
+    ``REPRO_PALLAS_COMPILED=1``), the fused pure-jnp reference elsewhere —
+    interpret-mode Pallas would only add per-block overhead on CPU while
+    XLA already fuses the ref's AXPY+dot chain into one loop."""
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() == "tpu"
+                      or os.environ.get("REPRO_PALLAS_COMPILED", "0") == "1")
     if not use_pallas:
         return ref.cg_fused_update_ref(alpha, x, v, r, bv)
     return _cg_pallas(alpha, x, v, r, bv, interpret=_interpret())

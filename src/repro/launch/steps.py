@@ -27,6 +27,14 @@ Candidate evaluation inside the CG stage follows the optimiser config's
 ``eval_accumulators`` ("loss_only" by default: the LossSpec's value-only
 fast path — for the lattice losses that is the engine's fused
 forward-only statistics).
+
+The CG-stage cost levers are plain ``SecondOrderConfig`` fields and
+therefore flow through both builders' ``**opt_overrides`` untouched:
+``curvature_sample`` (GN/Fisher products on a deterministic fraction of
+the CG batch, candidate eval on the full batch), ``cg_tol`` /
+``cg_min_iters`` (adaptive iteration budget, ``cg_iters`` as ceiling)
+and ``cg_fused`` (one fused kernel launch per iteration for the vector
+work; auto-disabled under a mesh).
 """
 from __future__ import annotations
 

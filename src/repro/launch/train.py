@@ -58,13 +58,29 @@ def _resolve_mesh(mesh):
     return mesh                        # an actual jax.sharding.Mesh
 
 
+def _parse_sample_schedule(sched):
+    """"0:1.0,100:0.5,300:0.25" (or a [(step, frac), ...] list) -> sorted
+    [(step, frac), ...]: the curvature-sample fraction to use from each
+    update index on (Sainath et al.'s shrinking sample across outer
+    iterations)."""
+    if sched is None:
+        return None
+    if isinstance(sched, str):
+        pairs = [p.split(":") for p in sched.split(",") if p.strip()]
+    else:
+        pairs = sched
+    return sorted((int(s), float(f)) for s, f in pairs)
+
+
 def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
                    steps=8, batch=32, cg_batch=8, frames=32, kappa=0.5,
                    cg_iters=6, ng_iters=2, lam=1.0, lr=None, noise=1.2,
                    smoke=False, mesh=None, backend="auto", init_params=None,
                    seed=0, verbose=True, ckpt_dir=None, resume=False,
                    dataset_batches=None, ckpt_every=10, warm_start=False,
-                   adapt_lam=False, preconditioner=None):
+                   adapt_lam=False, preconditioner=None,
+                   curvature_sample=None, curvature_sample_schedule=None,
+                   cg_tol=None, cg_fused=False):
     """Lattice MPE/MMI (or frame-CE) training of an acoustic model through
     the distributed launch layer.  Returns ``(params, log)``.
 
@@ -108,16 +124,33 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
             b = jax.device_put(b, sequence_input_shardings(mesh, b))
         return b
 
+    sample_sched = _parse_sample_schedule(curvature_sample_schedule)
     ocfg = config_for(optimizer, cg_iters=cg_iters, ng_iters=ng_iters,
                       lam=lam, warm_start=warm_start, adapt_lam=adapt_lam,
                       preconditioner=preconditioner,
+                      curvature_sample=curvature_sample, cg_tol=cg_tol,
+                      cg_fused=cg_fused or None,
                       lr=lr if lr is not None
                       else SEQ_DEFAULT_LR.get(optimizer))
-    step_fn, opt = S.build_sequence_step(
-        acfg, ocfg, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
-        state_sharding=state_sharding,
-        share_counts=acoustic.share_counts(acfg, params))
-    step = jax.jit(step_fn)
+    counts = acoustic.share_counts(acfg, params)
+
+    def build(frac=None):
+        cfg_u = ocfg if frac is None else ocfg.replace(curvature_sample=frac)
+        fn, o = S.build_sequence_step(
+            acfg, cfg_u, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
+            state_sharding=state_sharding, share_counts=counts)
+        return jax.jit(fn), o
+
+    def sched_frac(u):
+        if not sample_sched:
+            return None
+        frac = getattr(ocfg, "curvature_sample", 1.0)
+        for boundary, f in sample_sched:
+            if u >= boundary:
+                frac = f
+        return frac
+
+    step, opt = build()
     opt_state = opt.init(params, state_sharding=state_sharding)
 
     start = 0
@@ -134,8 +167,20 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
                               else u)
 
     log = []
+    cur_frac = None
     for u in range(start, steps):
         t0 = time.time()
+        want = sched_frac(u) if opt.uses_cg_batch else None
+        if want is not None and want != cur_frac:
+            # curvature-sample schedule boundary: the sample is a STATIC
+            # slice (jit-friendly), so a new fraction means one rebuild +
+            # recompile per phase — a handful over a whole run.  The
+            # optimiser state is untouched (curvature_sample does not
+            # enter the state template).
+            step, opt = build(want)
+            cur_frac = want
+            if verbose:
+                print(f"  [curvature-sample] step {u}: fraction -> {want}")
         gb = make_batch(grad_seed(u), batch)
         cb = make_batch(plan.cg_seed(0, u), cg_batch) \
             if opt.uses_cg_batch else None
@@ -192,6 +237,20 @@ def main(argv=None):
                     help="Levenberg-Marquardt-style λ adaptation")
     ap.add_argument("--preconditioner", default=None,
                     choices=["identity", "share_counts", "fisher_diag"])
+    ap.add_argument("--curvature-sample", type=float, default=None,
+                    help="fraction of the CG batch used for GN/Fisher "
+                    "curvature products (candidate eval keeps the full "
+                    "batch); e.g. 0.5")
+    ap.add_argument("--curvature-sample-schedule", default=None,
+                    help="shrink the curvature sample across updates, "
+                    "e.g. '0:1.0,100:0.5,300:0.25' (ASR archs only)")
+    ap.add_argument("--cg-tol", type=float, default=None,
+                    help="adaptive CG budget: stop when the quadratic "
+                    "model's relative per-iteration gain drops below "
+                    "this; --cg-iters becomes the ceiling")
+    ap.add_argument("--cg-fused", action="store_true",
+                    help="fused flat-buffer CG vector work (one kernel "
+                    "launch for x+=av, r-=aBv, <r,r>)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced geometry for CPU")
     ap.add_argument("--mesh", default="none",
@@ -216,7 +275,10 @@ def main(argv=None):
             mesh=args.mesh, backend=args.lattice_backend,
             ckpt_dir=args.ckpt_dir, resume=args.resume,
             warm_start=args.warm_start, adapt_lam=args.adapt_lam,
-            preconditioner=args.preconditioner)
+            preconditioner=args.preconditioner,
+            curvature_sample=args.curvature_sample,
+            curvature_sample_schedule=args.curvature_sample_schedule,
+            cg_tol=args.cg_tol, cg_fused=args.cg_fused)
         if args.log_json:
             with open(args.log_json, "w") as f:
                 json.dump(log, f, indent=1)
@@ -242,6 +304,9 @@ def main(argv=None):
                       ng_iters=args.ng_iters, warm_start=args.warm_start,
                       adapt_lam=args.adapt_lam,
                       preconditioner=args.preconditioner,
+                      curvature_sample=args.curvature_sample,
+                      cg_tol=args.cg_tol,
+                      cg_fused=args.cg_fused or None,
                       lr=args.lr if args.lr is not None
                       else LM_DEFAULT_LR.get(args.optimizer))
     step_fn, opt = S.build_step(cfg, ocfg, cg_frac=4, state_sharding=pshard)

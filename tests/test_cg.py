@@ -4,10 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed (pip install -r "
-    "requirements-dev.txt); skipping property-based tests")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from conftest import given, settings, st  # hypothesis, or skip-shim
 
 from repro.core import tree_math as tm
 from repro.core.cg import cg_solve
@@ -127,6 +124,167 @@ def test_cg_property_solves_spd(n, cond, seed):
                    {"x": jnp.asarray(b)}, iters=2 * n + 10)
     err = np.linalg.norm(np.asarray(res.x["x"]) - np.linalg.solve(A, b))
     assert err < 1e-2 * max(1.0, np.linalg.norm(b))
+
+
+# ---------------------------------------------------------------------------
+# adaptive iteration budget (tol > 0)
+# ---------------------------------------------------------------------------
+
+def _two_leaf_system(rng, n=24, cond=10.0):
+    A = _spd(rng, n, cond)
+    bvec = rng.standard_normal(n).astype(np.float32)
+    k = n // 2
+    b = {"a": jnp.asarray(bvec[:k]), "c": jnp.asarray(bvec[k:])}
+
+    def bv(v):
+        flat = jnp.concatenate([v["a"], v["c"]])
+        out = jnp.asarray(A, jnp.float32) @ flat
+        return {"a": out[:k], "c": out[k:]}
+
+    def unflat(res_x):
+        return np.concatenate([np.asarray(res_x["a"]), np.asarray(res_x["c"])])
+
+    return A, bvec, b, bv, unflat
+
+
+def test_adaptive_budget_stops_early_within_ceiling(rng):
+    """On an easy system the relative-improvement criterion fires well
+    before the ceiling; the solution is still accurate and iters_used
+    never exceeds the configured max."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=24, cond=5.0)
+    res = cg_solve(bv, b, iters=30, tol=1e-4)
+    used = int(res.iters_used)
+    assert 1 <= used < 30
+    x_star = np.linalg.solve(A, bvec)
+    err = np.linalg.norm(unflat(res.x) - x_star)
+    assert err <= 0.02 * (1.0 + np.linalg.norm(x_star))
+    # unexecuted history rows are inert: NaN quad/curv, inf losses
+    assert np.all(np.isnan(np.asarray(res.quad)[used:]))
+    assert np.all(np.isinf(np.asarray(res.losses)[used:]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), tol=st.floats(1e-6, 0.5),
+       iters=st.integers(1, 20))
+def test_adaptive_budget_never_exceeds_max(seed, tol, iters):
+    rng = np.random.default_rng(seed)
+    A, bvec, b, bv, _ = _two_leaf_system(rng, n=16, cond=50.0)
+    res = cg_solve(bv, b, iters=iters, tol=tol)
+    assert 1 <= int(res.iters_used) <= iters
+
+
+def test_adaptive_zero_tol_keeps_fixed_budget(rng):
+    """tol=0 is the historical fixed-budget scan: every iteration runs."""
+    _, _, b, bv, _ = _two_leaf_system(rng)
+    res = cg_solve(bv, b, iters=7, tol=0.0)
+    assert int(res.iters_used) == 7
+    assert np.isfinite(np.asarray(res.quad)).all()
+
+
+def test_adaptive_matches_fixed_at_equal_depth(rng):
+    """With a tolerance tight enough to never fire, the while_loop path
+    produces the same iterates as the scan path."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=20, cond=200.0)
+    fixed = cg_solve(bv, b, iters=6)
+    adap = cg_solve(bv, b, iters=6, tol=1e-12)
+    assert int(adap.iters_used) == 6
+    np.testing.assert_allclose(unflat(adap.x), unflat(fixed.x), rtol=1e-6,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(adap.quad), np.asarray(fixed.quad),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_adaptive_final_iterate_always_evaluated(rng):
+    """With eval_every > 1 the adaptively-chosen final iterate still gets
+    evaluated (post-loop) and competes for selection."""
+    _, _, b, bv, _ = _two_leaf_system(rng, n=12, cond=3.0)
+    res = cg_solve(bv, b, iters=20, tol=1e-3, eval_every=5,
+                   eval_fn=lambda x: -tm.norm(x))
+    used = int(res.iters_used)
+    assert used < 20
+    losses = np.asarray(res.losses)
+    assert np.isfinite(losses[used - 1])      # deepest candidate evaluated
+    finite = np.where(np.isfinite(losses), losses, np.nan)
+    assert int(res.best_iter) == int(np.nanargmin(finite))
+
+
+def test_adaptive_stops_on_negative_curvature(rng):
+    """The while_loop exits on the curvature guard instead of spinning
+    no-op iterations."""
+    n = 8
+    A = -np.eye(n, dtype=np.float32)
+    b = {"x": jnp.asarray(rng.standard_normal(n), jnp.float32)}
+    res = cg_solve(lambda v: {"x": jnp.asarray(A) @ v["x"]}, b, iters=9,
+                   tol=1e-6)
+    assert int(res.iters_used) == 1
+    np.testing.assert_allclose(np.asarray(res.x["x"]), 0.0)
+
+
+def test_adaptive_warm_start_uses_fewer_iterations(rng):
+    """The warm-start payoff the fixed budget could never show: starting
+    near the solution, the relative-improvement criterion fires earlier
+    at an equally good solution."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=24, cond=300.0)
+    x_star = np.linalg.solve(A, bvec)
+    k = len(bvec) // 2
+    x0 = {"a": jnp.asarray(x_star[:k] * 0.99, jnp.float32),
+          "c": jnp.asarray(x_star[k:] * 0.99, jnp.float32)}
+    cold = cg_solve(bv, b, iters=30, tol=1e-4)
+    warm = cg_solve(bv, b, iters=30, tol=1e-4, x0=x0)
+    assert int(warm.iters_used) < int(cold.iters_used)
+    # the early stop trades a few iterations for a slightly looser solve;
+    # the warm answer must still be a good solution in absolute terms
+    err_w = np.linalg.norm(unflat(warm.x) - x_star)
+    assert err_w <= 0.05 * (1.0 + np.linalg.norm(x_star))
+
+
+# ---------------------------------------------------------------------------
+# fused flat-buffer vector work (fused=True)
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_unfused_with_precond_and_eval(rng):
+    """Fused mode (flat buffer + cg_fused_update kernel) reproduces the
+    pytree path: iterates, preconditioned residuals, candidate selection —
+    with a legacy count-tree preconditioner and an eval_fn in play."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=20, cond=40.0)
+    counts = {"a": jnp.asarray(rng.uniform(1, 8, 10), jnp.float32),
+              "c": jnp.asarray(rng.uniform(1, 8, 10), jnp.float32)}
+    evf = lambda x: jnp.abs(tm.norm(x) - 0.3)                # noqa: E731
+    plain = cg_solve(bv, b, iters=8, precond=counts, eval_fn=evf)
+    fused = cg_solve(bv, b, iters=8, precond=counts, eval_fn=evf,
+                     fused=True)
+    np.testing.assert_allclose(unflat(fused.x), unflat(plain.x), rtol=2e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused.resid),
+                               np.asarray(plain.resid), rtol=2e-4)
+    assert int(fused.best_iter) == int(plain.best_iter)
+
+
+def test_fused_identity_precond_matches_plain(rng):
+    """Identity-preconditioner fast path: the kernel's exact blockwise
+    <r,r> stands in for <r,z> — same solution as the pytree path."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=16, cond=12.0)
+    plain = cg_solve(bv, b, iters=10)
+    fused = cg_solve(bv, b, iters=10, fused=True)
+    np.testing.assert_allclose(unflat(fused.x), unflat(plain.x), rtol=2e-5,
+                               atol=1e-6)
+
+
+def test_fused_adaptive_compose(rng):
+    """fused + tol compose: early stop with the flat-buffer vector work,
+    result unravelled back to the pytree structure."""
+    A, bvec, b, bv, unflat = _two_leaf_system(rng, n=24, cond=5.0)
+    res = cg_solve(bv, b, iters=30, tol=1e-4, fused=True)
+    assert int(res.iters_used) < 30
+    assert set(res.x) == {"a", "c"}               # pytree structure back
+    np.testing.assert_allclose(unflat(res.x), np.linalg.solve(A, bvec),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_fused_rejects_sharding_constraint(rng):
+    _, _, b, bv, _ = _two_leaf_system(rng)
+    with pytest.raises(ValueError, match="fused"):
+        cg_solve(bv, b, iters=4, fused=True, constrain=lambda t: t)
 
 
 @settings(max_examples=10, deadline=None)

@@ -251,6 +251,119 @@ def test_warm_start_reaches_lower_candidate_loss(key):
 
 
 # ---------------------------------------------------------------------------
+# CG-stage cost levers: curvature subsampling, fused vector work, adaptive
+# iteration budget (SecondOrderConfig.curvature_sample / cg_fused / cg_tol)
+# ---------------------------------------------------------------------------
+
+def _lever_run(params0, counts, gb, cb, nsteps=3, **kw):
+    kw.setdefault("ng_iters", 1)
+    opt = optim.get_optimizer("nghf", _fwd(CFG), LOSS, share_counts=counts,
+                              **kw)
+    state = opt.init(params0)
+    step = jax.jit(opt.step)
+    p = params0
+    iters, losses = [], []
+    for _ in range(nsteps):
+        p, state, m = step(p, state, gb, cb)
+        iters.append(int(m["cg_iters_used"]))
+        losses.append(float(m["cg_best_loss"]))
+    return p, iters, losses
+
+
+def _lever_batches():
+    gb = asr_batch(0, batch=8, num_frames=16, num_states=CFG.num_outputs,
+                   input_dim=CFG.input_dim)
+    cb = asr_batch(1, batch=4, num_frames=16, num_states=CFG.num_outputs,
+                   input_dim=CFG.input_dim)
+    return gb, cb
+
+
+def test_curvature_sample_full_fraction_bit_identical(key):
+    """curvature_sample=1.0 must be the EXACT unsampled computation — the
+    subsampler short-circuits, no slicing, no numeric drift."""
+    params0 = acoustic.init_params(CFG, key)
+    counts = acoustic.share_counts(CFG, params0)
+    gb, cb = _lever_batches()
+    p_def, _, l_def = _lever_run(params0, counts, gb, cb, nsteps=1,
+                                 cg_iters=4)
+    p_one, _, l_one = _lever_run(params0, counts, gb, cb, nsteps=1,
+                                 cg_iters=4, curvature_sample=1.0)
+    assert l_def == l_one
+    for a, b in zip(jax.tree.leaves(p_def), jax.tree.leaves(p_one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sampled_fused_update_reaches_candidate_loss_parity(key):
+    """Acceptance: the cheap path (half curvature batch + fused flat-buffer
+    vector work) reaches candidate-loss parity with the full computation —
+    the levers trade wall-clock, not update quality."""
+    params0 = acoustic.init_params(CFG, key)
+    counts = acoustic.share_counts(CFG, params0)
+    gb, cb = _lever_batches()
+    _, _, l_full = _lever_run(params0, counts, gb, cb, cg_iters=8,
+                              ng_iters=2)
+    _, _, l_fast = _lever_run(params0, counts, gb, cb, cg_iters=8,
+                              ng_iters=2, curvature_sample=0.5,
+                              cg_fused=True)
+    assert np.isfinite(l_fast[-1])
+    # candidate loss after 3 updates within 15% of the unsampled path
+    assert abs(l_fast[-1] - l_full[-1]) <= 0.15 * abs(l_full[-1]), \
+        (l_fast, l_full)
+
+
+def test_adaptive_budget_in_optimizer_respects_ceiling(key):
+    """cg_tol > 0 through SecondOrderConfig: iters_used is reported per
+    update, never exceeds cg_iters, and actually fires early."""
+    params0 = acoustic.init_params(CFG, key)
+    counts = acoustic.share_counts(CFG, params0)
+    gb, cb = _lever_batches()
+    _, iters, losses = _lever_run(params0, counts, gb, cb, cg_iters=24,
+                                  cg_tol=0.02)
+    assert all(1 <= u <= 24 for u in iters), iters
+    assert any(u < 24 for u in iters), iters     # the criterion fired
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_nghf_sampled_curvature_beats_sgd(key):
+    """The paper's per-update superiority survives curvature subsampling:
+    NGHF with GN/Fisher products on half the CG batch still does far more
+    per update than SGD."""
+    params0 = acoustic.init_params(CFG, key)
+    counts = acoustic.share_counts(CFG, params0)
+    gb, cb = _lever_batches()
+    opt = optim.get_optimizer("nghf", _fwd(CFG), LOSS, share_counts=counts,
+                              cg_iters=5, ng_iters=2, curvature_sample=0.5)
+    state = opt.init(params0)
+    step = jax.jit(opt.step)
+    p = params0
+    for _ in range(3):
+        p, state, m_ng = step(p, state, gb, cb)
+    sgd = optim.get_optimizer("sgd", _fwd(CFG), LOSS, lr=0.1)
+    s = sgd.init(params0)
+    sstep = jax.jit(sgd.step)
+    q = params0
+    for _ in range(3):
+        q, s, m_sgd = sstep(q, s, gb)
+    assert float(m_ng["mpe_acc"]) > float(m_sgd["mpe_acc"])
+
+
+def test_warm_adaptive_uses_fewer_iterations_at_parity(key):
+    """The warm-start payoff under the adaptive budget (the fix for the
+    bench regression): warm-started solves spend FEWER total CG iterations
+    across a short run while landing at candidate-loss parity."""
+    params0 = acoustic.init_params(CFG, key)
+    counts = acoustic.share_counts(CFG, params0)
+    gb, cb = _lever_batches()
+    _, it_cold, l_cold = _lever_run(params0, counts, gb, cb, nsteps=4,
+                                    cg_iters=24, cg_tol=0.3)
+    _, it_warm, l_warm = _lever_run(params0, counts, gb, cb, nsteps=4,
+                                    cg_iters=24, cg_tol=0.3,
+                                    warm_start=True)
+    assert sum(it_warm) < sum(it_cold), (it_warm, it_cold)
+    assert l_warm[-1] <= l_cold[-1] + 0.1 * abs(l_cold[-1]), (l_warm, l_cold)
+
+
+# ---------------------------------------------------------------------------
 # λ adaptation
 # ---------------------------------------------------------------------------
 
