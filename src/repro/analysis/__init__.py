@@ -1,0 +1,37 @@
+"""repro.analysis — the repo's static-analysis subsystem.
+
+Two pillars, both wired into the CI ``analysis`` lane:
+
+  * **Graph auditor** (``graph_audit`` + ``rules_graph``): lowers the
+    REAL jitted step functions (``launch.steps.build_step`` /
+    ``build_sequence_step`` / the serve decode step) on dry-run smoke
+    shapes and asserts machine-checkable invariants on the compiled
+    HLO — dtype discipline (no f64 in training graphs), buffer
+    donation of (params, opt_state), no host callbacks/infeed inside
+    jitted paths, a one-trace-per-shape recompilation guard, sharding
+    completeness of batch-leading ``Lattice`` fields under a mesh, and
+    a collective census diffed against per-(arch, mesh) golden
+    baselines in ``tests/goldens/``.
+
+  * **reprolint** (``lint`` + ``rules_ast``): an AST pass encoding
+    repo-specific rules — no host numpy / ``.item()`` sync inside
+    jit-traced modules, no Python ``if`` on traced values, every
+    Pallas kernel must have a ``_ref`` oracle and a kernel-vs-ref
+    test, every ``custom_jvp``/``custom_vjp`` must register its rule,
+    and masked-axis reductions must go through the all-masked-row-safe
+    helpers in ``lattice_engine.common``.
+
+Run them:
+
+    python -m repro.analysis.lint src/
+    python -m repro.analysis.graph_audit [--update-goldens]
+    python -m repro.analysis                # both + analysis_report.json
+
+Why this exists: NGHF's pitch is *fewer, more careful* updates, which
+makes silent graph regressions (an undonated optimiser state, an f64
+leak into the CG loop, an extra all-reduce per curvature product)
+disproportionately expensive.  These checks turn the invariants the
+optimiser/lattice/launch layers established into CI failures instead of
+perf archaeology.
+"""
+from repro.analysis.rules_ast import Violation  # noqa: F401

@@ -1,0 +1,54 @@
+"""Combined runner: both pillars + one reviewable artifact.
+
+    python -m repro.analysis [--report analysis_report.json] [src ...]
+
+Runs reprolint over the source tree and the graph audit over every
+target, writes ``analysis_report.json`` (rule -> violations, per-graph
+facts: dtypes, donation, collective counts) and exits non-zero if either
+pillar fails.  CI uploads the report next to ``BENCH_lattice.json`` so
+graph drift is reviewable PR-over-PR.
+"""
+from repro.analysis import graph_audit  # noqa: F401  (XLA_FLAGS first)
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import os        # noqa: E402
+import sys       # noqa: E402
+
+from repro.analysis.lint import run_lint  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="lint roots (default: the src/ tree this "
+                    "package lives in)")
+    ap.add_argument("--report", default="analysis_report.json")
+    args = ap.parse_args(argv)
+    paths = args.paths or [os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..")]
+
+    violations = run_lint(paths)
+    audit, audit_failures = graph_audit.run_audit()
+    report = {
+        "reprolint": {
+            "violations": [v.to_json() for v in violations],
+            "count": len(violations),
+        },
+        "graph_audit": audit,
+    }
+    with open(args.report, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    for v in violations:
+        print(v)
+    for fail in audit_failures:
+        print(f"FAIL {fail}")
+    ok = not violations and not audit_failures
+    print(f"analysis: reprolint {len(violations)} violations, graph audit "
+          f"{len(audit_failures)} failures -> {args.report} "
+          f"[{'ok' if ok else 'FAIL'}]")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

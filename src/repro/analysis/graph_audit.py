@@ -1,0 +1,332 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# Must run before jax initialises (same contract as launch/dryrun.py):
+# the mesh audit targets need 8 CPU devices.  setdefault so an outer
+# driver (dryrun, CI) can pick a different count.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+from typing import Callable, Dict, List, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.analysis import rules_graph                     # noqa: E402
+
+"""Pillar 1: the graph auditor.
+
+Lowers the REAL step functions — ``launch.steps.build_sequence_step``
+(the paper's workload, with and without a mesh), ``build_step`` (LM
+archetypes) and ``build_serve_step`` — on smoke shapes, and applies the
+``rules_graph`` invariants to the compiled HLO:
+
+  GA001 no f64            GA002 (params, opt_state) donated
+  GA003 no host callbacks GA004 collective census vs goldens
+  GA005 retrace guard     GA006 Lattice sharding completeness
+  GA007 fused-kernel dtype discipline (bf16 stays bf16, f32 accumulate)
+
+Run:  python -m repro.analysis.graph_audit [--update-goldens]
+Golden baselines: tests/goldens/collectives_<target>.json — regenerate
+with --update-goldens after an INTENDED collective change and commit the
+diff (docs/static_analysis.md has the workflow).
+"""
+
+GOLDENS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "tests", "goldens")
+
+# targets whose collective census is pinned to a golden baseline
+GOLDEN_TARGETS = ("lstm-asr__mesh4x2", "tdnn-asr__mesh2x4")
+
+
+def _debug_mesh(data: int, model: int):
+    from jax.sharding import Mesh
+    n = data * model
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devs)} — run as its own process "
+            f"so the XLA_FLAGS override at module top takes effect")
+    return Mesh(np.asarray(devs[:n]).reshape(data, model),
+                ("data", "model"))
+
+
+def _sequence_setup(arch: str, mesh_shape: Optional[Tuple[int, int]]):
+    """(jitted step, args, aux) for an NGHF sequence step on smoke
+    geometry — the exact builder + donation the trainer uses."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.acoustic import get_acoustic_config
+    from repro.core.optim import config_for
+    from repro.data.synthetic import asr_batch
+    from repro.launch.sharding import sequence_input_shardings
+    from repro.launch.steps import build_sequence_step, jit_train_step
+    from repro.models import acoustic
+
+    acfg = get_acoustic_config(arch).smoke()
+    params = acoustic.init_params(acfg, jax.random.PRNGKey(0))
+    mesh = state_sharding = None
+    if mesh_shape is not None:
+        mesh = _debug_mesh(*mesh_shape)
+        state_sharding = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), params)
+        params = jax.device_put(params, state_sharding)
+    socfg = config_for("nghf", cg_iters=2, ng_iters=1)
+    counts = acoustic.share_counts(acfg, params)
+    fn, opt = build_sequence_step(acfg, socfg, loss="mpe", kappa=0.5,
+                                  mesh=mesh, state_sharding=state_sharding,
+                                  share_counts=counts)
+    opt_state = opt.init(params, state_sharding=state_sharding)
+
+    def batch(seed, n):
+        b = asr_batch(seed, batch=n, num_frames=8,
+                      num_states=acfg.num_outputs,
+                      input_dim=acfg.input_dim)
+        if mesh is not None:
+            b = jax.device_put(b, sequence_input_shardings(mesh, b))
+        return b
+
+    step = jit_train_step(fn)
+    args = (params, opt_state, batch(0, 8), batch(1, 4))
+    return step, args, dict(mesh=mesh, make_batch=batch,
+                            n_param_leaves=len(jax.tree.leaves(params)),
+                            n_state_leaves=len(jax.tree.leaves(opt_state)))
+
+
+def _lm_setup():
+    """NGHF on the smallest LM archetype, smoke geometry, no mesh."""
+    from repro.configs.base import get_config
+    from repro.core.optim import config_for
+    from repro.data.synthetic import lm_batch
+    from repro.launch.steps import build_step, jit_train_step
+    from repro.models.registry import get_model
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ocfg = config_for("nghf", cg_iters=2, ng_iters=1)
+    fn, opt = build_step(cfg, ocfg, cg_frac=4)
+    opt_state = opt.init(params)
+    gb = lm_batch(0, batch=4, seq_len=16, vocab=cfg.vocab_size)
+    step = jit_train_step(fn)
+    return step, (params, opt_state, gb), dict(
+        mesh=None, make_batch=None,
+        n_param_leaves=len(jax.tree.leaves(params)),
+        n_state_leaves=len(jax.tree.leaves(opt_state)))
+
+
+def _serve_setup():
+    """Single-token decode step (no donation by design)."""
+    from repro.configs.base import get_config
+    from repro.launch.steps import build_serve_step
+    from repro.models.registry import get_model
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    specs = model.input_specs("decode_32k")
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         specs["cache"])
+    tokens = jnp.zeros(specs["tokens"].shape, specs["tokens"].dtype)
+    pos = jnp.zeros(specs["pos"].shape, specs["pos"].dtype)
+    fn = build_serve_step(cfg)
+    return jax.jit(fn), (params, cache, tokens, pos), dict(
+        mesh=None, make_batch=None, n_param_leaves=0, n_state_leaves=0)
+
+
+# name -> (setup, train?, retrace-check?)
+TARGETS: Dict[str, Tuple[Callable, bool, bool]] = {
+    "lstm-asr__nomesh": (lambda: _sequence_setup("lstm-asr", None),
+                         True, True),
+    "lstm-asr__mesh4x2": (lambda: _sequence_setup("lstm-asr", (4, 2)),
+                          True, False),
+    "tdnn-asr__mesh2x4": (lambda: _sequence_setup("tdnn-asr", (2, 4)),
+                          True, False),
+    "lm-qwen-smoke": (_lm_setup, True, False),
+    "serve-decode": (_serve_setup, False, False),
+}
+
+
+def check_sharding_completeness(mesh, batch) -> List[str]:
+    """GA006: every array leaf of the batch with a mesh-divisible leading
+    batch dim must be sharded over the data axes — an unsharded Lattice
+    field silently replicates (B, A) arc tensors to every device."""
+    from repro.launch.sharding import (data_extent,
+                                       sequence_input_shardings)
+    failures: List[str] = []
+    _, dp_size = data_extent(mesh)
+    shardings = sequence_input_shardings(mesh, batch)
+    leaves = jax.tree_util.tree_leaves_with_path(batch)
+    shard_leaves = jax.tree.leaves(shardings)
+    for (path, leaf), shd in zip(leaves, shard_leaves):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            continue
+        if leaf.shape[0] % dp_size:
+            continue                      # guarded replication is fine
+        spec = getattr(shd, "spec", None)
+        if spec is None or len(spec) == 0 or spec[0] is None:
+            failures.append(
+                f"GA006: batch leaf {jax.tree_util.keystr(path)} "
+                f"shape={tuple(leaf.shape)} has no batch-dim pspec")
+    return failures
+
+
+def check_retrace(step, args, make_batch) -> List[str]:
+    """GA005: executing the step twice on same-shape batches must not
+    retrace (cache size stays 1).  Donation makes reuse of args[0:2]
+    invalid, so the second call chains the first call's outputs."""
+    p, s, *rest = args
+    p, s, _ = step(p, s, *rest)
+    fresh = [make_batch(100 + i, b["feats"].shape[0])
+             for i, b in enumerate(rest)]
+    step(p, s, *fresh)
+    n = step._cache_size()
+    if n != 1:
+        return [f"GA005: {n} traces after two same-shape calls "
+                f"(expected 1) — something in the step re-triggers "
+                f"tracing per call"]
+    return []
+
+
+def check_fused_dtypes() -> List[str]:
+    """GA007: dtype discipline of the fused kernels, via eval_shape (no
+    execution).  The fused CG vector-work must keep bf16 iterates in
+    bf16 with an f32 <r,r>; the loss-only kernels must return f32
+    LossStats for f32 inputs (no silent f64, no bf16 degradation)."""
+    from repro.kernels.ref import cg_fused_update_ref
+    failures: List[str] = []
+    bf = jax.ShapeDtypeStruct((16,), jnp.bfloat16)
+    a = jax.ShapeDtypeStruct((), jnp.float32)
+    x, r, rr = jax.eval_shape(cg_fused_update_ref, a, bf, bf, bf, bf)
+    for name, got in (("x", x.dtype), ("r", r.dtype)):
+        if got != jnp.bfloat16:
+            failures.append(f"GA007: cg_fused_update {name} promoted "
+                            f"bf16 -> {got}")
+    if rr.dtype != jnp.float32:
+        failures.append(f"GA007: cg_fused_update <r,r> accumulator is "
+                        f"{rr.dtype}, expected f32")
+
+    from repro.data.synthetic import asr_batch
+    from repro.lattice_engine.api import lattice_stats
+    lat = asr_batch(0, batch=2, num_frames=8, num_states=12,
+                    input_dim=4)["lattice"]
+    lp = jax.ShapeDtypeStruct((2, 8, 12), jnp.float32)
+    stats = jax.eval_shape(
+        lambda p: lattice_stats(lat, p, 0.5, backend="scan",
+                                accumulators="loss_only"), lp)
+    for name, leaf in zip(("logZ", "c_avg"), jax.tree.leaves(stats)):
+        if leaf.dtype != jnp.float32:
+            failures.append(f"GA007: loss_only {name} is {leaf.dtype}, "
+                            f"expected f32")
+    return failures
+
+
+def golden_path(name: str, goldens_dir: Optional[str] = None) -> str:
+    return os.path.join(goldens_dir or GOLDENS_DIR,
+                        f"collectives_{name}.json")
+
+
+def audit_target(name: str, *, update_goldens: bool = False,
+                 goldens_dir: Optional[str] = None) -> Tuple[Dict, List[str]]:
+    """Lower one target and apply every rule; returns (facts, failures)."""
+    setup, train, retrace = TARGETS[name]
+    step, args, aux = setup()
+    failures: List[str] = []
+
+    if aux["mesh"] is not None:
+        with aux["mesh"]:
+            text = step.lower(*args).compile().as_text()
+    else:
+        text = step.lower(*args).compile().as_text()
+
+    golden = None
+    gpath = golden_path(name, goldens_dir)
+    census = rules_graph.collective_census(text)
+    if name in GOLDEN_TARGETS:
+        if update_goldens:
+            os.makedirs(os.path.dirname(gpath), exist_ok=True)
+            with open(gpath, "w") as f:
+                json.dump(dict(target=name, **census), f, indent=1,
+                          sort_keys=True)
+                f.write("\n")
+        elif os.path.exists(gpath):
+            with open(gpath) as f:
+                golden = json.load(f)
+        else:
+            failures.append(f"GA004: golden {gpath} missing — run "
+                            f"python -m repro.analysis.graph_audit "
+                            f"--update-goldens and commit it")
+
+    # donation floor: every param leaf must alias (opt_state contains
+    # small integer counters XLA may legitimately decline to alias, so
+    # the floor is params + half the state leaves).
+    min_donated = aux["n_param_leaves"] + aux["n_state_leaves"] // 2
+    facts, rule_failures = rules_graph.audit_text(
+        text, train=train, min_donated=max(min_donated, 1) if train else 0,
+        golden=golden)
+    failures.extend(rule_failures)
+    facts.update(target=name, train=train,
+                 n_param_leaves=aux["n_param_leaves"],
+                 n_state_leaves=aux["n_state_leaves"])
+
+    if aux["mesh"] is not None:
+        failures.extend(check_sharding_completeness(aux["mesh"], args[2]))
+    if retrace and aux["make_batch"] is not None:
+        failures.extend(check_retrace(step, args, aux["make_batch"]))
+    return facts, failures
+
+
+def run_audit(targets=None, *, update_goldens: bool = False,
+              goldens_dir: Optional[str] = None) -> Tuple[Dict, List[str]]:
+    """All targets + the lowering-free GA007 check.  Returns
+    (report, failures)."""
+    names = list(targets or TARGETS)
+    report: Dict = {"targets": {}, "failures": []}
+    failures: List[str] = []
+    for name in names:
+        facts, fs = audit_target(name, update_goldens=update_goldens,
+                                 goldens_dir=goldens_dir)
+        report["targets"][name] = facts
+        failures.extend(f"[{name}] {f}" for f in fs)
+    fs = check_fused_dtypes()
+    report["fused_dtypes_ok"] = not fs
+    failures.extend(f"[fused-kernels] {f}" for f in fs)
+    report["failures"] = failures
+    return report, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.graph_audit",
+        description="lower the real jitted steps and audit the compiled "
+                    "HLO (rule catalog: docs/static_analysis.md)")
+    ap.add_argument("--targets", default=None,
+                    help=f"comma-separated subset of {sorted(TARGETS)}")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help="rewrite tests/goldens/ collective baselines "
+                    "from the current graphs")
+    ap.add_argument("--goldens-dir", default=None)
+    ap.add_argument("--report", default=None,
+                    help="write the audit facts to this JSON path")
+    args = ap.parse_args(argv)
+    targets = args.targets.split(",") if args.targets else None
+    report, failures = run_audit(targets,
+                                 update_goldens=args.update_goldens,
+                                 goldens_dir=args.goldens_dir)
+    for name, facts in report["targets"].items():
+        print(f"[{'FAIL' if any(f.startswith(f'[{name}]') for f in failures) else 'ok'}] "
+              f"{name}: donated={len(facts['donated_params'])} "
+              f"dtypes={sorted(facts['dtypes'])} "
+              f"collectives={facts['collective_counts'] or '{}'}")
+    for f in failures:
+        print(f"FAIL {f}")
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    print(f"graph audit: {len(failures)} failure"
+          f"{'s' if len(failures) != 1 else ''} across "
+          f"{len(report['targets'])} graphs")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

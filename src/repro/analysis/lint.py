@@ -1,0 +1,207 @@
+"""reprolint — the repo-specific AST lint pass.
+
+    python -m repro.analysis.lint src/            # human output, exit 1
+    python -m repro.analysis.lint src/ --json     # machine output
+
+Scoping (which rule families apply where) is decided here from file
+location; the rules themselves live in ``rules_ast``.  One repo-level
+rule (RL004, Pallas-kernel/oracle/test pairing) needs cross-file facts
+and is implemented below.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+from typing import Iterable, List, Optional
+
+from repro.analysis.rules_ast import (RULES, Scope, Violation, _dotted,
+                                      lint_source)
+
+# modules whose function bodies run under jax.jit — the traced-scope
+# rules (RL001/RL002/RL003/RL006a) apply here.  Everything else
+# (launch drivers, data pipeline, checkpoint IO, configs, benchmarks)
+# is host-side by construction.
+TRACED_PREFIXES = (
+    "repro/kernels/",
+    "repro/lattice_engine/",
+    "repro/losses/",
+    "repro/core/",
+    "repro/models/",
+)
+
+# modules whose reduction axes are padded arc/frontier axes — raw
+# logsumexp/softmax is banned outright (RL006b).  ``common.py`` defines
+# the sanctioned helpers and is excluded by the helper-name allowlist
+# inside the rule, not here.
+MASKED_DOMAIN_PREFIXES = (
+    "repro/lattice_engine/",
+)
+
+# RL004 geography: where kernels live, where oracles live, where the
+# kernel-vs-ref tests live.
+KERNEL_DIR = "repro/kernels"
+KERNEL_EXEMPT = ("ref.py", "ops.py", "__init__.py")
+ORACLE_FILE = "repro/kernels/ref.py"
+
+
+def scope_for(relpath: str) -> Scope:
+    rel = relpath.replace(os.sep, "/")
+    # strip any leading src/ prefix so scoping is anchor-independent
+    if "/repro/" in rel:
+        rel = "repro/" + rel.split("/repro/", 1)[1]
+    return Scope(
+        traced=rel.startswith(TRACED_PREFIXES),
+        masked_domain=rel.startswith(MASKED_DOMAIN_PREFIXES),
+    )
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                if "__pycache__" in root:
+                    continue
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+    return sorted(set(out))
+
+
+# ---------------------------------------------------------------------------
+# RL004: every Pallas kernel needs a _ref oracle AND a kernel-vs-ref test
+# ---------------------------------------------------------------------------
+
+def _public_pallas_kernels(path: str, text: str):
+    """(name, line) of top-level public defs that invoke pl.pallas_call
+    (directly or through a nested function)."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return []
+    out = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) \
+                or node.name.startswith("_"):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                d = _dotted(sub.func) or ""
+                if d.split(".")[-1] == "pallas_call":
+                    out.append((node.name, node.lineno))
+                    break
+    return out
+
+
+def _defined_functions(text: str) -> set:
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return set()
+    return {n.name for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def check_kernel_oracles(src_root: str,
+                         tests_root: Optional[str] = None
+                         ) -> List[Violation]:
+    """RL004: every public Pallas kernel ``k`` in ``kernels/`` must have
+    a ``k_ref`` oracle in ``kernels/ref.py`` AND be exercised by name in
+    at least one test file.  An oracle-less kernel has no ground truth —
+    exactly how a lowering bug on a new backend ships silently."""
+    out: List[Violation] = []
+    kdir = os.path.join(src_root, KERNEL_DIR)
+    if not os.path.isdir(kdir):
+        return out
+    oracle_path = os.path.join(src_root, ORACLE_FILE)
+    oracles = set()
+    if os.path.exists(oracle_path):
+        with open(oracle_path) as f:
+            oracles = _defined_functions(f.read())
+    if tests_root is None:
+        # src/ -> repo root/tests (the layout this repo uses)
+        tests_root = os.path.join(os.path.dirname(os.path.abspath(
+            src_root.rstrip("/"))), "tests")
+    test_text = ""
+    if os.path.isdir(tests_root):
+        for f in sorted(os.listdir(tests_root)):
+            if f.startswith("test") and f.endswith(".py"):
+                with open(os.path.join(tests_root, f)) as fh:
+                    test_text += fh.read()
+    for fname in sorted(os.listdir(kdir)):
+        if not fname.endswith(".py") or fname in KERNEL_EXEMPT:
+            continue
+        path = os.path.join(kdir, fname)
+        with open(path) as f:
+            text = f.read()
+        for name, line in _public_pallas_kernels(path, text):
+            if f"{name}_ref" not in oracles:
+                out.append(Violation(
+                    "RL004", path, line,
+                    f"Pallas kernel {name!r} has no {name}_ref oracle "
+                    f"in kernels/ref.py"))
+            if test_text and name not in test_text:
+                out.append(Violation(
+                    "RL004", path, line,
+                    f"Pallas kernel {name!r} is not exercised by name "
+                    f"in any tests/test_*.py (kernel-vs-ref test "
+                    f"required)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_lint(paths: Iterable[str], *, repo_rules: bool = True
+             ) -> List[Violation]:
+    """Lint every .py file under ``paths``; returns all violations."""
+    violations: List[Violation] = []
+    files = iter_py_files(paths)
+    src_roots = set()
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        violations.extend(lint_source(text, path, scope_for(path)))
+        norm = path.replace(os.sep, "/")
+        if "/repro/" in norm:
+            src_roots.add(norm.split("/repro/", 1)[0] or ".")
+    if repo_rules:
+        for root in sorted(src_roots):
+            violations.extend(check_kernel_oracles(root))
+    return sorted(set(violations), key=lambda v: (v.path, v.line, v.rule))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific AST lint (rule catalog: "
+                    "docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="+", help="files or directories")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid, (_, summary) in sorted(RULES.items()):
+            print(f"{rid}  {summary}")
+        print("RL004  every Pallas kernel needs a _ref oracle and a "
+              "kernel-vs-ref test")
+        return 0
+    violations = run_lint(args.paths)
+    if args.json:
+        print(json.dumps([v.to_json() for v in violations], indent=1))
+    else:
+        for v in violations:
+            print(v)
+        n = len(violations)
+        print(f"reprolint: {n} violation{'s' if n != 1 else ''} in "
+              f"{len(iter_py_files(args.paths))} files")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

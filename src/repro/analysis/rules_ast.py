@@ -1,0 +1,388 @@
+"""reprolint's AST rules — repo-specific invariants on the source tree.
+
+Every rule has an ``RLxxx`` id, a one-line summary, and a rationale tied
+to how this codebase actually breaks (see ``docs/static_analysis.md``
+for the catalog).  Rules are scoped: most only apply inside *traced
+modules* — the code that runs under ``jax.jit`` (``kernels/``,
+``lattice_engine/``, ``losses/``, ``core/``, ``models/``) — because a
+host-side driver is allowed to call ``np.asarray`` all it wants.
+
+Escape hatches (annotations in the linted source):
+
+  * ``# reprolint: host`` on a ``def`` line marks the function (and its
+    nested functions) as host-side by design — lattice builders,
+    topology checks, anything that must never see a tracer.  The
+    traced-scope rules skip it.
+  * ``# reprolint: disable=RL001[,RL002]`` on a line suppresses those
+    rules for that line.
+  * ``# reprolint: skip-file`` in the first ten lines skips the file.
+
+The module is pure stdlib ``ast`` — no jax import, so the lint runs in
+milliseconds and can never be broken by an accelerator runtime.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+
+HOST_MARKER = "# reprolint: host"
+_DISABLE_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9, ]+)")
+_SKIP_FILE = "# reprolint: skip-file"
+
+# reductions whose ``where=`` form means "masked axis" (RL006)
+_MASKED_REDUCERS = ("logsumexp", "softmax", "log_softmax")
+# the sanctioned all-masked-row-safe helpers (lattice_engine.common /
+# the in-kernel copies in kernels/)
+_SAFE_HELPERS = ("masked_logsumexp", "masked_softmax", "_masked_lse_rows",
+                 "_masked_lse_row")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str            # "RL001"
+    path: str            # repo-relative file path
+    line: int            # 1-based
+    msg: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+    def to_json(self):
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "msg": self.msg}
+
+
+class Scope(NamedTuple):
+    """Which rule families apply to a file (decided by ``lint`` from the
+    file's location; tests force scopes directly on fixture files)."""
+    traced: bool = False          # module runs under jit (RL001/2/3/6a)
+    masked_domain: bool = False   # module reduces over masked arc axes
+    #                               (RL006b: raw logsumexp/softmax banned)
+
+
+class _Ctx:
+    """Per-file facts shared by all rules."""
+
+    def __init__(self, tree: ast.Module, text: str, path: str,
+                 scope: Scope):
+        self.tree = tree
+        self.text = text
+        self.path = path
+        self.scope = scope
+        self.lines = text.splitlines()
+        # numpy / jax.numpy aliases bound by imports in this module
+        self.np_aliases: set = set()
+        self.jnp_aliases: set = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "numpy":
+                        self.np_aliases.add(a.asname or "numpy")
+                    if a.name == "jax.numpy":
+                        self.jnp_aliases.add(a.asname or "jax.numpy")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax" and any(a.name == "numpy"
+                                                for a in node.names):
+                    for a in node.names:
+                        if a.name == "numpy":
+                            self.jnp_aliases.add(a.asname or "numpy")
+        # spans (lineno, end_lineno) of functions marked host-side
+        self.host_spans: List[Tuple[int, int]] = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                line = self.lines[node.lineno - 1]
+                if HOST_MARKER in line:
+                    self.host_spans.append((node.lineno, node.end_lineno))
+        # line -> set of disabled rule ids
+        self.disabled: Dict[int, set] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = _DISABLE_RE.search(line)
+            if m:
+                self.disabled[i] = {r.strip()
+                                    for r in m.group(1).split(",")}
+
+    def is_host(self, node: ast.AST) -> bool:
+        ln = getattr(node, "lineno", None)
+        if ln is None:
+            return False
+        return any(lo <= ln <= hi for lo, hi in self.host_spans)
+
+    def traced_functions(self):
+        """Top-of-nest traced (non-host-marked) function defs."""
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and not self.is_host(node):
+                yield node
+
+    def allowed(self, rule: str, line: int) -> bool:
+        return rule not in self.disabled.get(line, ())
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    d = _dotted(node)
+    return d.split(".")[0] if d else None
+
+
+def _calls_jnp(node: ast.AST, ctx: _Ctx) -> bool:
+    """Does the expression (sub)tree invoke jax.numpy / jnp / jax.lax?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = _dotted(sub.func)
+            if d is None:
+                continue
+            root = d.split(".")[0]
+            if root in ctx.jnp_aliases or d.startswith(("jax.numpy.",
+                                                        "jax.lax.",
+                                                        "jax.nn.")):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def rule_RL001(ctx: _Ctx) -> List[Violation]:
+    """host-numpy-in-traced: no ``np.*`` inside functions of jit-traced
+    modules.  Host numpy inside a traced function either crashes on a
+    tracer or — worse — silently constant-folds a batch-dependent value
+    into the compiled graph.  Host-side builders (lattice construction,
+    topology checks) carry ``# reprolint: host``."""
+    out = []
+    if not ctx.scope.traced or not ctx.np_aliases:
+        return out
+    for fn in ctx.traced_functions():
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue           # nested defs visited via their own walk
+            if isinstance(node, ast.Name) and node.id in ctx.np_aliases \
+                    and isinstance(node.ctx, ast.Load):
+                if ctx.is_host(node):
+                    continue
+                if ctx.allowed("RL001", node.lineno):
+                    out.append(Violation(
+                        "RL001", ctx.path, node.lineno,
+                        f"host numpy ({node.id}.*) inside jit-traced "
+                        f"function {fn.name!r} — use jax.numpy, or mark "
+                        f"the function '# reprolint: host'"))
+    # dedupe (nested walks can revisit)
+    return sorted(set(out), key=lambda v: v.line)
+
+
+def rule_RL002(ctx: _Ctx) -> List[Violation]:
+    """host-sync-in-traced: no ``.item()`` / ``jax.device_get`` /
+    ``np.asarray(x)`` inside traced functions.  Each is a device->host
+    sync: under jit it fails on tracers; outside jit but inside the
+    step's call path it serialises the dispatch queue."""
+    out = []
+    if not ctx.scope.traced:
+        return out
+    sync_calls = {"device_get"}
+    for fn in ctx.traced_functions():
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or ctx.is_host(node):
+                continue
+            d = _dotted(node.func)
+            if d is None:
+                continue
+            leaf = d.split(".")[-1]
+            root = d.split(".")[0]
+            bad = None
+            if leaf == "item" and isinstance(node.func, ast.Attribute):
+                bad = ".item() host sync"
+            elif leaf in sync_calls and root == "jax":
+                bad = f"jax.{leaf}() host sync"
+            elif root in ctx.np_aliases and leaf in ("asarray", "array"):
+                bad = f"{d}() host materialisation"
+            if bad and ctx.allowed("RL002", node.lineno):
+                out.append(Violation(
+                    "RL002", ctx.path, node.lineno,
+                    f"{bad} inside jit-traced function {fn.name!r}"))
+    return sorted(set(out), key=lambda v: v.line)
+
+
+def rule_RL003(ctx: _Ctx) -> List[Violation]:
+    """python-if-on-traced: no Python ``if``/``while`` whose test invokes
+    jax.numpy — under jit that raises a ConcretizationTypeError at best,
+    and at worst (outside jit, inside a step about to be jitted) encodes
+    a data-dependent branch that silently vanishes when jitted.  Use
+    ``jnp.where`` / ``lax.cond``."""
+    out = []
+    if not ctx.scope.traced:
+        return out
+    for fn in ctx.traced_functions():
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                continue
+            if ctx.is_host(node) or not _calls_jnp(node.test, ctx):
+                continue
+            if ctx.allowed("RL003", node.lineno):
+                kind = {"If": "if", "While": "while",
+                        "IfExp": "conditional expression"}[
+                            type(node).__name__]
+                out.append(Violation(
+                    "RL003", ctx.path, node.lineno,
+                    f"Python {kind} on a traced (jax.numpy) value in "
+                    f"{fn.name!r} — use jnp.where / lax.cond"))
+    return sorted(set(out), key=lambda v: v.line)
+
+
+def rule_RL005(ctx: _Ctx) -> List[Violation]:
+    """custom-derivative-unregistered: every ``jax.custom_jvp`` /
+    ``jax.custom_vjp`` in a module must register its rule
+    (``.defjvp`` / ``.defvjp``) in the same module.  An unregistered
+    custom primitive traces fine and only explodes when the optimiser
+    first differentiates through it — at CG-product depth, far from the
+    definition."""
+    out = []
+    decorated: Dict[str, Tuple[int, str]] = {}   # name -> (line, kind)
+    registered: set = set()
+    def _dec_target(dec) -> str:
+        """Dotted name of a decorator, looking through Call decorators
+        (``@jax.custom_jvp(...)`` / ``@partial(jax.custom_jvp, ...)``)."""
+        if isinstance(dec, ast.Call):
+            d = _dotted(dec.func) or ""
+            if d.split(".")[-1] == "partial" and dec.args:
+                return _dotted(dec.args[0]) or ""
+            return d
+        return _dotted(dec) or ""
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = _dec_target(dec)
+                if d.endswith(("custom_jvp", "custom_vjp")):
+                    kind = "jvp" if d.endswith("jvp") else "vjp"
+                    decorated[node.name] = (node.lineno, kind)
+                if d.endswith((".defjvp", ".defjvps", ".defvjp")):
+                    registered.add(d.rsplit(".", 1)[0])
+        elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                         ast.Call):
+            d = _dotted(node.value.func) or ""
+            if d.endswith(("custom_jvp", "custom_vjp")):
+                kind = "jvp" if d.endswith("jvp") else "vjp"
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        decorated[t.id] = (node.lineno, kind)
+        elif isinstance(node, ast.Call):
+            d = _dotted(node.func) or ""
+            if d.endswith((".defjvp", ".defjvps", ".defvjp")):
+                registered.add(d.rsplit(".", 1)[0])
+    for name, (line, kind) in decorated.items():
+        if name not in registered and ctx.allowed("RL005", line):
+            out.append(Violation(
+                "RL005", ctx.path, line,
+                f"custom_{kind} {name!r} never registers its rule "
+                f"(.def{kind} missing in this module) — differentiating "
+                f"through it will fail at CG-product depth"))
+    return sorted(set(out), key=lambda v: v.line)
+
+
+def rule_RL006(ctx: _Ctx) -> List[Violation]:
+    """unsafe-masked-reduction: masked-axis reductions must go through
+    the all-masked-row-safe helpers (``lattice_engine.common
+    .masked_logsumexp`` / ``masked_softmax``).  Two triggers:
+
+      (a) any ``logsumexp``/``softmax`` call passing ``where=``/``b=``
+          in a traced module — the raw where= form gives all-masked rows
+          uniform 1/W weights, leaking cotangents into padded arcs;
+      (b) in masked-domain modules (the lattice engine's backends), ANY
+          raw ``jax.nn.logsumexp``/``softmax``/``jax.scipy`` call —
+          every reduction axis there is a padded arc/frontier axis."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func) or ""
+        leaf = d.split(".")[-1]
+        if leaf in _SAFE_HELPERS:
+            continue
+        is_reducer = leaf in _MASKED_REDUCERS
+        if not is_reducer:
+            continue
+        has_where = any(kw.arg in ("where", "b") for kw in node.keywords)
+        if ctx.scope.traced and has_where \
+                and ctx.allowed("RL006", node.lineno):
+            out.append(Violation(
+                "RL006", ctx.path, node.lineno,
+                f"{leaf}(..., where=) over a masked axis — all-masked "
+                f"rows get uniform weights and leak gradient into "
+                f"padding; use lattice_engine.common.masked_{leaf}"))
+        elif ctx.scope.masked_domain and not ctx.is_host(node) \
+                and leaf in ("logsumexp", "softmax") \
+                and ctx.allowed("RL006", node.lineno):
+            out.append(Violation(
+                "RL006", ctx.path, node.lineno,
+                f"raw {leaf} in a masked-domain module — arc/frontier "
+                f"axes are padded; use the masked_* helpers from "
+                f"lattice_engine.common"))
+    return sorted(set(out), key=lambda v: v.line)
+
+
+def rule_RL007(ctx: _Ctx) -> List[Violation]:
+    """f64-literal: no ``float64`` dtype requests in library code.  The
+    training graphs are audited f64-free (graph pillar); this catches
+    the source-level seed — a ``jnp.float64`` / ``astype('float64')`` /
+    ``np.float64`` that would either silently degrade to f32 (x64
+    disabled) or, with x64 on, double the CG state and halve kernel
+    throughput."""
+    out = []
+    for node in ast.walk(ctx.tree):
+        line = None
+        what = None
+        if isinstance(node, ast.Attribute) and node.attr == "float64":  # reprolint: disable=RL007
+            line, what = node.lineno, f"{_dotted(node)}"
+        elif isinstance(node, ast.Constant) and node.value == "float64":  # reprolint: disable=RL007
+            line, what = node.lineno, "'float64'"
+        if line is not None and ctx.allowed("RL007", line):
+            out.append(Violation(
+                "RL007", ctx.path, line,
+                f"f64 dtype request ({what}) — training graphs are "
+                f"audited f64-free; use float32/bfloat16"))
+    return sorted(set(out), key=lambda v: v.line)
+
+
+# rule id -> (fn, summary).  RL004 (kernel-oracle pairing) is a
+# repo-level rule and lives in ``lint.check_kernel_oracles``.
+RULES: Dict[str, Tuple[Callable[[_Ctx], List[Violation]], str]] = {
+    "RL001": (rule_RL001, "no host numpy inside jit-traced functions"),
+    "RL002": (rule_RL002, "no .item()/device_get/np.asarray host sync "
+                          "inside jit-traced functions"),
+    "RL003": (rule_RL003, "no Python if/while on traced values"),
+    "RL005": (rule_RL005, "custom_jvp/custom_vjp must register its rule"),
+    "RL006": (rule_RL006, "masked-axis reductions must use the "
+                          "all-masked-row-safe helpers"),
+    "RL007": (rule_RL007, "no float64 dtype requests in library code"),
+}
+
+
+def lint_source(text: str, path: str, scope: Scope) -> List[Violation]:
+    """Run every AST rule over one file's source."""
+    head = "\n".join(text.splitlines()[:10])
+    if _SKIP_FILE in head:
+        return []
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Violation("RL000", path, e.lineno or 0,
+                          f"syntax error: {e.msg}")]
+    ctx = _Ctx(tree, text, path, scope)
+    out: List[Violation] = []
+    for fn, _ in RULES.values():
+        out.extend(fn(ctx))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))

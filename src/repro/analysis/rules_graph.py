@@ -1,0 +1,174 @@
+"""Graph-audit rules: pure-text fact extraction over compiled HLO.
+
+Everything here takes HLO *text* (``compiled.as_text()``) and returns
+plain data, so every rule is unit-testable against hand-written HLO
+snippets without lowering anything.  ``graph_audit`` is the driver that
+lowers the real step graphs and applies these rules.
+
+Rule IDs (catalog + rationale: docs/static_analysis.md):
+
+  GA001  no f64 anywhere in a training graph
+  GA002  (params, opt_state) must be donated into the step
+  GA003  no host callbacks / infeed / outfeed inside jitted paths
+  GA004  collective census must match the golden baseline
+  GA005  one-trace-per-shape recompilation guard (checked in graph_audit
+         via ``jitted._cache_size()`` — nothing to parse here)
+  GA006  sharding completeness of batch-leading Lattice fields (checked
+         in graph_audit against ``launch.sharding`` — nothing to parse)
+  GA007  no unintended bf16->f32 promotion in the fused kernels'
+         outputs (checked in graph_audit via ``jax.eval_shape``)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Set, Tuple
+
+from repro.launch.hlo_analysis import analyze as analyze_hlo
+
+_F64_RE = re.compile(r"\bf64\[")
+# custom-call targets that bounce through the Python host at runtime
+HOST_CALLBACK_TARGETS = (
+    "xla_python_cpu_callback",
+    "xla_ffi_python_cpu_callback",
+    "xla_python_gpu_callback",
+    "CallbackCustomCall",
+)
+_CUSTOM_CALL_RE = re.compile(r'custom_call_target="([^"]+)"')
+_HOST_OP_RE = re.compile(r"\b(infeed|outfeed|send|recv)\(")
+
+
+def find_f64(text: str) -> List[Tuple[int, str]]:
+    """GA001: (1-based line, stripped snippet) of every f64-typed value."""
+    out = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if _F64_RE.search(line):
+            out.append((i, line.strip()[:120]))
+    return out
+
+
+def _alias_block(text: str) -> str:
+    """The balanced-brace body of ``input_output_alias={ ... }`` in the
+    HloModule header ('' when absent == nothing donated)."""
+    key = "input_output_alias={"
+    start = text.find(key)
+    if start < 0:
+        return ""
+    i = start + len(key)
+    depth = 1
+    while i < len(text) and depth:
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+        i += 1
+    return text[start + len(key): i - 1]
+
+
+# one alias entry: "{out_index}: (param_number, {param_index}, kind)"
+_ALIAS_ENTRY = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)\s*,")
+
+
+def donated_params(text: str) -> Set[int]:
+    """GA002: the set of entry-parameter numbers that alias an output
+    (i.e. were actually donated and accepted by XLA)."""
+    return {int(m.group(1)) for m in _ALIAS_ENTRY.finditer(_alias_block(text))}
+
+
+def check_donation(text: str, *, min_params: int = 1) -> List[str]:
+    """GA002 failures: empty unless fewer than ``min_params`` entry
+    parameters are donated.  jit flattens the (params, opt_state) pytrees
+    to many leaf parameters, so for a real train step ``min_params``
+    should be the donatable-leaf count (or a floor of it)."""
+    got = donated_params(text)
+    if len(got) >= min_params:
+        return []
+    return [f"GA002: {len(got)} donated parameters "
+            f"(input_output_alias), expected >= {min_params} — "
+            f"params/opt_state are not donated into this step"]
+
+
+def find_host_callbacks(text: str) -> List[Tuple[int, str]]:
+    """GA003: (1-based line, what) for every host round-trip — Python
+    callback custom-calls and infeed/outfeed/send/recv ops."""
+    out = []
+    for i, line in enumerate(text.splitlines(), 1):
+        m = _CUSTOM_CALL_RE.search(line)
+        if m and any(t in m.group(1) for t in HOST_CALLBACK_TARGETS):
+            out.append((i, f"custom-call {m.group(1)}"))
+            continue
+        m = _HOST_OP_RE.search(line)
+        # "send(" / "recv(" only as opcodes (after "= "), not substrings
+        if m and re.search(r"=\s*\(?[^=]*?" + m.group(1) + r"\(", line):
+            out.append((i, f"{m.group(1)} op"))
+    return out
+
+
+def collective_census(text: str) -> Dict:
+    """GA004 facts: trip-count-weighted collective counts and bytes from
+    ``launch.hlo_analysis.analyze`` (a new all-reduce inside the CG while
+    loop is counted cg_iters times — exactly the regression we care
+    about)."""
+    a = analyze_hlo(text)
+    return {
+        "collective_counts": {k: int(v)
+                              for k, v in a["collective_counts"].items()},
+        "collective_bytes": float(a["collective_bytes"]),
+    }
+
+
+def diff_census(actual: Dict, golden: Dict) -> List[str]:
+    """GA004 failures: exact diff of collective COUNTS against the golden
+    baseline (bytes are recorded in the report but not gated — shape
+    tweaks legitimately move bytes; a new collective kind or a changed
+    count is the regression signal)."""
+    out = []
+    a = actual.get("collective_counts", {})
+    g = golden.get("collective_counts", {})
+    for kind in sorted(set(a) | set(g)):
+        ca, cg = a.get(kind, 0), g.get(kind, 0)
+        if ca != cg:
+            out.append(f"GA004: {kind} count {ca} != golden {cg}")
+    return out
+
+
+def dtype_census(text: str) -> Dict[str, int]:
+    """Occurrences of each element type in the graph — context for the
+    report (and what GA001/GA007 failures point at)."""
+    counts: Dict[str, int] = {}
+    for m in re.finditer(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|"
+                         r"s8|u64|u32|u16|u8|pred)\[", text):
+        counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts
+
+
+def audit_text(text: str, *, train: bool, min_donated: int = 1,
+               golden: Dict | None = None) -> Tuple[Dict, List[str]]:
+    """Apply every text rule to one compiled graph.
+
+    Returns ``(facts, failures)``; ``failures`` is empty when the graph
+    passes.  ``train`` gates the donation requirement (serve/prefill
+    graphs donate nothing by design).
+    """
+    failures: List[str] = []
+    f64 = find_f64(text)
+    if f64:
+        failures.extend(f"GA001: f64 at HLO line {ln}: {snip}"
+                        for ln, snip in f64[:5])
+    cbs = find_host_callbacks(text)
+    if cbs:
+        failures.extend(f"GA003: host round-trip at HLO line {ln}: {what}"
+                        for ln, what in cbs[:5])
+    donated = sorted(donated_params(text))
+    if train:
+        failures.extend(check_donation(text, min_params=min_donated))
+    census = collective_census(text)
+    if golden is not None:
+        failures.extend(diff_census(census, golden))
+    facts = {
+        "dtypes": dtype_census(text),
+        "f64_sites": len(f64),
+        "donated_params": donated,
+        "host_callbacks": [what for _, what in cbs],
+        **census,
+    }
+    return facts, failures

@@ -176,7 +176,7 @@ def finalize(lat: Lattice, alpha, beta, c_alpha, c_beta,
                    c_arc=c_alpha + c_beta)
 
 
-def _concrete(x):
+def _concrete(x):  # reprolint: host
     """numpy view of a lattice field, or None if traced/abstract."""
     if x is None or isinstance(x, jax.core.Tracer):
         return None

@@ -186,9 +186,14 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
             out_shardings = (in_shardings[0], in_shardings[1], None)
         elif INPUT_SHAPES[shape_name].mode == "decode":
             out_shardings = (None, in_shardings[1])
+        # train graphs donate (params, opt_state) exactly as the real
+        # driver does (steps.jit_train_step) so the dry-run memory numbers
+        # and the graph audit see the production aliasing.
+        donate = (0, 1) if INPUT_SHAPES[shape_name].mode == "train" else ()
         with mesh, _fsdp_ctx(cfg, mesh):
             lowered = jax.jit(fn, in_shardings=in_shardings,
-                              out_shardings=out_shardings).lower(*args)
+                              out_shardings=out_shardings,
+                              donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower

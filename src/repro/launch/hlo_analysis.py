@@ -200,9 +200,9 @@ def analyze(text: str) -> Dict:
     bytes_accessed = 0.0
     coll = {k: 0.0 for k in COLLECTIVES}
     coll_counts = {k: 0 for k in COLLECTIVES}
-    fused = {name for name in comps
-             if "fused" in name or "region" in name and False}
-    # computations reached only via calls= (fusions): skip their bytes
+    # computations reached via calls= (fusions): skip their bytes.  Name
+    # heuristics ("fused"/"region" substrings) are NOT used — only the
+    # call-site structure decides what counts as a fusion body.
     fusion_bodies = set(re.findall(r"calls=%?([\w\.\-]+)", text))
     reducers = set(re.findall(r"to_apply=%?([\w\.\-]+)", text))
 

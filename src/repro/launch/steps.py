@@ -88,6 +88,24 @@ def cg_sub_batch(batch: dict, frac: int, min_size: int):
     return jax.tree.map(slc, batch)
 
 
+def jit_train_step(step: Callable, **jit_kwargs) -> Callable:
+    """jit a train step donating ``(params, opt_state)`` — args 0 and 1 of
+    every builder here.
+
+    Both θ-sized pytrees are dead the moment the update returns (the
+    driver loops rebind them from the step's outputs), so donating lets
+    XLA update them in place instead of holding old+new simultaneously —
+    for NGHF that is params + CG/optimiser state, the largest buffers in
+    the graph.  Donation makes the inputs invalid after the call: never
+    reuse a donated ``params``/``opt_state`` value (checkpoint saves must
+    use the step's OUTPUTS, which ``checkpoint.io`` copies to host
+    eagerly).  The graph auditor (``repro.analysis.graph_audit``) checks
+    the resulting ``input_output_alias`` on every train graph.
+    """
+    jit_kwargs.setdefault("donate_argnums", (0, 1))
+    return jax.jit(step, **jit_kwargs)
+
+
 def build_step(cfg: ArchConfig, opt_spec, *, cg_frac: int = 8,
                min_cg: int = 1, state_sharding=None,
                **opt_overrides) -> Tuple[Callable, Optimizer]:

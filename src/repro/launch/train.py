@@ -26,6 +26,7 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.io import load_train_state, save_train_state
@@ -108,8 +109,13 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
             acfg = acfg.smoke()
     mesh = _resolve_mesh(mesh)
 
-    params = init_params if init_params is not None else \
-        acoustic.init_params(acfg, jax.random.PRNGKey(seed))
+    if init_params is not None:
+        # the jitted update donates (params, opt_state) — copy so the
+        # CALLER's arrays survive the first step (examples reuse the same
+        # init_params across several train_sequence runs)
+        params = jax.tree.map(jnp.copy, init_params)
+    else:
+        params = acoustic.init_params(acfg, jax.random.PRNGKey(seed))
     state_sharding = None
     if mesh is not None:
         state_sharding = jax.tree.map(
@@ -139,7 +145,9 @@ def train_sequence(*, arch=None, acfg=None, optimizer="nghf", loss="mpe",
         fn, o = S.build_sequence_step(
             acfg, cfg_u, loss=loss, kappa=kappa, backend=backend, mesh=mesh,
             state_sharding=state_sharding, share_counts=counts)
-        return jax.jit(fn), o
+        # donate (params, opt_state): the loop below rebinds both from the
+        # step outputs, and checkpoints copy out post-step values.
+        return S.jit_train_step(fn), o
 
     def sched_frac(u):
         if not sample_sched:
@@ -310,7 +318,7 @@ def main(argv=None):
                       lr=args.lr if args.lr is not None
                       else LM_DEFAULT_LR.get(args.optimizer))
     step_fn, opt = S.build_step(cfg, ocfg, cg_frac=4, state_sharding=pshard)
-    step = jax.jit(step_fn)
+    step = S.jit_train_step(step_fn)
     opt_state = opt.init(params, state_sharding=pshard)
 
     start = 0
@@ -324,7 +332,6 @@ def main(argv=None):
         batch = lm_batch(i, batch=args.batch, seq_len=args.seq,
                          vocab=cfg.vocab_size)
         if cfg.is_encoder_decoder:
-            import jax.numpy as jnp
             batch["encoder_input"] = jax.random.normal(
                 jax.random.fold_in(key, i),
                 (args.batch, cfg.encoder_frames, cfg.d_model)).astype(cfg.cdtype)

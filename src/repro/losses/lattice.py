@@ -140,7 +140,7 @@ def lattice_frontiers(lat: "Lattice") -> Frontiers:
                      start=start, final=final)
 
 
-def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,
+def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,  # reprolint: host
                   arc_mask: np.ndarray) -> np.ndarray:
     """Topological levelization of one lattice's arc DAG (numpy, unbatched).
 
@@ -175,7 +175,8 @@ def levelize_arcs(preds: np.ndarray, is_start: np.ndarray,
     return out
 
 
-def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
+def make_sausage_lattice(rng: np.random.Generator, *,  # reprolint: host
+                         num_frames: int,
                          num_states: int, seg_len: int = 4, n_alt: int = 3,
                          max_arcs: int | None = None) -> dict:
     """Generate one synthetic sausage lattice as numpy arrays (unbatched)."""
@@ -234,7 +235,8 @@ def make_sausage_lattice(rng: np.random.Generator, *, num_frames: int,
     return out
 
 
-def make_random_dag_lattice(rng: np.random.Generator, *, num_frames: int,
+def make_random_dag_lattice(rng: np.random.Generator, *,  # reprolint: host
+                            num_frames: int,
                             num_states: int, skip_prob: float = 0.4,
                             max_alt: int = 3,
                             max_arcs: int | None = None) -> dict:
@@ -312,7 +314,7 @@ def make_random_dag_lattice(rng: np.random.Generator, *, num_frames: int,
     return out
 
 
-def batch_lattices(lats: list[dict]) -> Lattice:
+def batch_lattices(lats: list[dict]) -> Lattice:  # reprolint: host
     lats = [dict(l) for l in lats]
     for l in lats:
         if "level_arcs" not in l:
@@ -336,7 +338,8 @@ def batch_lattices(lats: list[dict]) -> Lattice:
     return Lattice(**stacked)
 
 
-def make_lattice_batch(seed: int, *, batch: int, num_frames: int,
+def make_lattice_batch(seed: int, *, batch: int,  # reprolint: host
+                       num_frames: int,
                        num_states: int, seg_len: int = 4,
                        n_alt: int = 3) -> Lattice:
     rng = np.random.default_rng(seed)

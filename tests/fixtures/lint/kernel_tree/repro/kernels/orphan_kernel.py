@@ -1,0 +1,13 @@
+"""Seeded RL004 violation: a public Pallas kernel with no _ref oracle
+and no kernel-vs-ref test.  Parsed, never imported."""
+from jax.experimental import pallas as pl
+
+
+def orphan_kernel(x):                    # RL004: no orphan_kernel_ref
+    return pl.pallas_call(lambda x_ref, o_ref: None,
+                          out_shape=x)(x)
+
+
+def _private_helper(x):                  # private: exempt from RL004
+    return pl.pallas_call(lambda x_ref, o_ref: None,
+                          out_shape=x)(x)

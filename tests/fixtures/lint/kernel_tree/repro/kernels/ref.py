@@ -1,0 +1,6 @@
+"""Oracle file for the RL004 fixture tree — deliberately missing
+``orphan_kernel_ref``."""
+
+
+def some_other_ref(x):
+    return x

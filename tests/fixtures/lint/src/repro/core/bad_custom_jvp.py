@@ -1,0 +1,20 @@
+"""Seeded RL005 violation: custom_jvp with no jvp rule registered.
+
+Parsed, never imported (tests/test_analysis_lint.py).
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_jvp
+def forgotten(x):                        # RL005: no .defjvp anywhere
+    return jnp.tanh(x)
+
+
+@jax.custom_jvp
+def registered(x):
+    return jnp.tanh(x)
+
+
+registered.defjvp(lambda primals, tangents: (registered(primals[0]),
+                                             tangents[0]))

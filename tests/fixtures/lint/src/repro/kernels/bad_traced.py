@@ -1,0 +1,26 @@
+"""Seeded reprolint violations for a traced-scope module (kernels/).
+
+NEVER import this — it exists only to be parsed by tests/test_analysis_lint.py.
+Expected: RL001, RL002, RL003, RL007.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+
+def bad_host_numpy(x):
+    return np.exp(x) + jnp.sum(x)        # RL001: host numpy in traced code
+
+
+def bad_item_sync(x):
+    s = jnp.sum(x)
+    return s.item()                      # RL002: host sync inside jit
+
+
+def bad_python_branch(x):
+    if jnp.any(x > 0):                   # RL003: Python if on traced value
+        return x
+    return -x
+
+
+def bad_f64(x):
+    return x.astype(jnp.float64)         # RL007: f64 dtype request

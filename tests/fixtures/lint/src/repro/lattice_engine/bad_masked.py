@@ -1,0 +1,17 @@
+"""Seeded RL006 violations: raw reductions over masked arc axes.
+
+Parsed, never imported (tests/test_analysis_lint.py).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def bad_raw_logsumexp(scores):
+    # RL006: raw logsumexp in a masked-domain module — an all-masked row
+    # yields -inf and NaN gradients; must use masked_logsumexp
+    return jax.nn.logsumexp(scores, axis=-1)
+
+
+def bad_where_kwarg(scores, mask):
+    # RL006: where= on a traced logsumexp (the exact all-masked-row trap)
+    return jax.scipy.special.logsumexp(scores, axis=-1, where=mask)

@@ -1,0 +1,135 @@
+"""reprolint (repro.analysis pillar 2): every rule catches its seeded
+fixture, the escape hatches work, and the real src/ tree is clean."""
+import os
+
+import pytest
+
+from repro.analysis.lint import (check_kernel_oracles, iter_py_files,
+                                 run_lint, scope_for)
+from repro.analysis.rules_ast import Scope, lint_source
+
+HERE = os.path.dirname(__file__)
+FIXTURES = os.path.join(HERE, "fixtures", "lint")
+SRC = os.path.join(HERE, "..", "src")
+
+TRACED = Scope(traced=True)
+MASKED = Scope(traced=True, masked_domain=True)
+
+
+def rules_of(violations):
+    return sorted({v.rule for v in violations})
+
+
+# ---------------------------------------------------------------------------
+# fixtures: every seeded violation is caught
+# ---------------------------------------------------------------------------
+
+def test_traced_fixture_flags_rl001_002_003_007():
+    path = os.path.join(FIXTURES, "src", "repro", "kernels",
+                        "bad_traced.py")
+    vs = run_lint([path])
+    assert rules_of(vs) == ["RL001", "RL002", "RL003", "RL007"]
+    # one violation per seeded function, at the seeded line
+    by_rule = {v.rule: v.line for v in vs}
+    text = open(path).read().splitlines()
+    assert "np.exp" in text[by_rule["RL001"] - 1]
+    assert ".item()" in text[by_rule["RL002"] - 1]
+
+
+def test_custom_jvp_fixture_flags_only_unregistered():
+    path = os.path.join(FIXTURES, "src", "repro", "core",
+                        "bad_custom_jvp.py")
+    vs = run_lint([path])
+    assert rules_of(vs) == ["RL005"]
+    assert len(vs) == 1 and "forgotten" in vs[0].msg
+
+
+def test_masked_domain_fixture_flags_rl006():
+    path = os.path.join(FIXTURES, "src", "repro", "lattice_engine",
+                        "bad_masked.py")
+    vs = run_lint([path])
+    assert rules_of(vs) == ["RL006"]
+    assert len(vs) == 2            # raw call + where= kwarg
+
+
+def test_rl004_missing_oracle():
+    tree = os.path.join(FIXTURES, "kernel_tree")
+    vs = check_kernel_oracles(tree, tests_root=os.path.join(tree, "no"))
+    assert [v.rule for v in vs] == ["RL004"]
+    assert "orphan_kernel_ref" in vs[0].msg
+    assert "_private_helper" not in " ".join(v.msg for v in vs)
+
+
+def test_rl004_missing_test(tmp_path):
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_something.py").write_text("def test_unrelated(): pass\n")
+    tree = os.path.join(FIXTURES, "kernel_tree")
+    vs = check_kernel_oracles(tree, tests_root=str(tests))
+    msgs = " ".join(v.msg for v in vs)
+    assert "not exercised" in msgs and "no orphan_kernel_ref" in msgs
+
+
+# ---------------------------------------------------------------------------
+# escape hatches + scoping
+# ---------------------------------------------------------------------------
+
+def test_host_marker_exempts_function():
+    src = ("import numpy as np\n"
+           "def builder(x):  # reprolint: host\n"
+           "    return np.asarray(x)\n")
+    assert lint_source(src, "f.py", TRACED) == []
+
+
+def test_disable_comment_is_rule_specific():
+    src = "import numpy as np\ndef f(x):\n    return np.exp(x)\n"
+    ok = src.replace("np.exp(x)", "np.exp(x)  # reprolint: disable=RL001")
+    other = src.replace("np.exp(x)", "np.exp(x)  # reprolint: disable=RL002")
+    assert lint_source(ok, "f.py", TRACED) == []
+    assert rules_of(lint_source(other, "f.py", TRACED)) == ["RL001"]
+
+
+def test_skip_file():
+    src = ("# reprolint: skip-file\n"
+           "import numpy as np\n"
+           "def f(x):\n    return np.exp(x)\n")
+    assert lint_source(src, "f.py", TRACED) == []
+
+
+def test_host_scope_allows_numpy():
+    src = "import numpy as np\ndef f(x):\n    return np.exp(x)\n"
+    assert lint_source(src, "f.py", Scope()) == []
+
+
+def test_scope_for_paths():
+    assert scope_for("src/repro/kernels/lattice_fb.py").traced
+    assert scope_for("src/repro/lattice_engine/common.py").masked_domain
+    assert not scope_for("src/repro/launch/train.py").traced
+    assert not scope_for("benchmarks/optim_bench.py").traced
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean (the PR's acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean():
+    vs = run_lint([SRC])
+    assert vs == [], "\n".join(str(v) for v in vs)
+
+
+def test_iter_py_files_dedups_and_sorts(tmp_path):
+    (tmp_path / "a.py").write_text("x = 1\n")
+    (tmp_path / "b.txt").write_text("not python\n")
+    got = iter_py_files([str(tmp_path), str(tmp_path / "a.py")])
+    assert got == [str(tmp_path / "a.py")]
+
+
+def test_cli_exit_codes(capsys):
+    from repro.analysis.lint import main
+    bad = os.path.join(FIXTURES, "src")
+    assert main([bad]) == 1
+    assert main([bad, "--json"]) == 1
+    out = capsys.readouterr().out
+    assert '"rule": "RL001"' in out
+    clean = os.path.join(SRC, "repro", "analysis")
+    assert main([clean]) == 0
