@@ -1,6 +1,6 @@
 """repro.analysis — the repo's static-analysis subsystem.
 
-Two pillars, both wired into the CI ``analysis`` lane:
+Three pillars, all wired into the CI ``analysis`` lane:
 
   * **Graph auditor** (``graph_audit`` + ``rules_graph``): lowers the
     REAL jitted step functions (``launch.steps.build_step`` /
@@ -11,7 +11,9 @@ Two pillars, both wired into the CI ``analysis`` lane:
     jitted paths, a one-trace-per-shape recompilation guard, sharding
     completeness of batch-leading ``Lattice`` fields under a mesh, and
     a collective census diffed against per-(arch, mesh) golden
-    baselines in ``tests/goldens/``.
+    baselines in ``tests/goldens/`` — plus a compiled-cost census
+    (flops, bytes moved, peak memory) diffed against per-graph resource
+    goldens.
 
   * **reprolint** (``lint`` + ``rules_ast``): an AST pass encoding
     repo-specific rules — no host numpy / ``.item()`` sync inside
@@ -21,11 +23,22 @@ Two pillars, both wired into the CI ``analysis`` lane:
     and masked-axis reductions must go through the all-masked-row-safe
     helpers in ``lattice_engine.common``.
 
+  * **Kernel sanitizer** (``sanitize_kernels`` + ``rules_kernel`` +
+    ``corpus``): verifies the whole ``kernels/`` layer without
+    hardware — static grid/BlockSpec/index-map structure and frontier
+    invariants, a dynamic pass running every public kernel in interpret
+    mode over an adversarial lattice corpus (zero-arc, single-level,
+    max fan-in, padded row; f32 + bf16) with gather-bounds and
+    NaN/oracle checks on the captured launches, and a precision-flow
+    audit pinning the lse/cumsum/<r,r> accumulations to f32.  A seeded
+    mutation self-test proves the rules actually fire.
+
 Run them:
 
     python -m repro.analysis.lint src/
     python -m repro.analysis.graph_audit [--update-goldens]
-    python -m repro.analysis                # both + analysis_report.json
+    python -m repro.analysis.sanitize_kernels [--self-test]
+    python -m repro.analysis                # all three + analysis_report.json
 
 Why this exists: NGHF's pitch is *fewer, more careful* updates, which
 makes silent graph regressions (an undonated optimiser state, an f64

@@ -1,12 +1,13 @@
-"""Combined runner: both pillars + one reviewable artifact.
+"""Combined runner: all three pillars + one reviewable artifact.
 
     python -m repro.analysis [--report analysis_report.json] [src ...]
 
-Runs reprolint over the source tree and the graph audit over every
-target, writes ``analysis_report.json`` (rule -> violations, per-graph
-facts: dtypes, donation, collective counts) and exits non-zero if either
-pillar fails.  CI uploads the report next to ``BENCH_lattice.json`` so
-graph drift is reviewable PR-over-PR.
+Runs reprolint over the source tree, the graph audit over every target,
+and the kernel sanitizer over the adversarial corpus; writes
+``analysis_report.json`` (rule -> violations, per-graph facts: dtypes,
+donation, collective counts, compiled cost, per-case sanitizer facts)
+and exits non-zero if any pillar fails.  CI uploads the report next to
+``BENCH_lattice.json`` so graph drift is reviewable PR-over-PR.
 """
 from repro.analysis import graph_audit  # noqa: F401  (XLA_FLAGS first)
 
@@ -15,7 +16,8 @@ import json      # noqa: E402
 import os        # noqa: E402
 import sys       # noqa: E402
 
-from repro.analysis.lint import run_lint  # noqa: E402
+from repro.analysis.lint import run_lint                  # noqa: E402
+from repro.analysis.sanitize_kernels import run_sanitize  # noqa: E402
 
 
 def main(argv=None) -> int:
@@ -30,12 +32,14 @@ def main(argv=None) -> int:
 
     violations = run_lint(paths)
     audit, audit_failures = graph_audit.run_audit()
+    sanitize, sanitize_failures = run_sanitize()
     report = {
         "reprolint": {
             "violations": [v.to_json() for v in violations],
             "count": len(violations),
         },
         "graph_audit": audit,
+        "kernel_sanitizer": sanitize,
     }
     with open(args.report, "w") as f:
         json.dump(report, f, indent=1, sort_keys=True)
@@ -43,9 +47,12 @@ def main(argv=None) -> int:
         print(v)
     for fail in audit_failures:
         print(f"FAIL {fail}")
-    ok = not violations and not audit_failures
+    for fail in sanitize_failures:
+        print(f"FAIL {fail}")
+    ok = not violations and not audit_failures and not sanitize_failures
     print(f"analysis: reprolint {len(violations)} violations, graph audit "
-          f"{len(audit_failures)} failures -> {args.report} "
+          f"{len(audit_failures)} failures, kernel sanitizer "
+          f"{len(sanitize_failures)} failures -> {args.report} "
           f"[{'ok' if ok else 'FAIL'}]")
     return 0 if ok else 1
 

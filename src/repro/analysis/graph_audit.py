@@ -25,11 +25,13 @@ archetypes) and ``build_serve_step`` — on smoke shapes, and applies the
   GA003 no host callbacks GA004 collective census vs goldens
   GA005 retrace guard     GA006 Lattice sharding completeness
   GA007 fused-kernel dtype discipline (bf16 stays bf16, f32 accumulate)
+  GA008 compiled cost (flops / bytes moved / peak memory) vs goldens
 
 Run:  python -m repro.analysis.graph_audit [--update-goldens]
-Golden baselines: tests/goldens/collectives_<target>.json — regenerate
-with --update-goldens after an INTENDED collective change and commit the
-diff (docs/static_analysis.md has the workflow).
+Golden baselines: tests/goldens/collectives_<target>.json (GA004) and
+tests/goldens/resources_<target>.json (GA008) — regenerate with
+--update-goldens after an INTENDED collective/cost change and commit
+the diff (docs/static_analysis.md has the workflow).
 """
 
 GOLDENS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -37,6 +39,11 @@ GOLDENS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 # targets whose collective census is pinned to a golden baseline
 GOLDEN_TARGETS = ("lstm-asr__mesh4x2", "tdnn-asr__mesh2x4")
+
+# targets whose compiled cost (flops / bytes moved / peak memory) is
+# pinned to a resource golden (GA008) — one per audited graph family:
+# the paper's sequence step, the LM step, and the serve path
+RESOURCE_TARGETS = ("lstm-asr__nomesh", "lm-qwen-smoke", "serve-decode")
 
 
 def _debug_mesh(data: int, model: int):
@@ -225,6 +232,40 @@ def golden_path(name: str, goldens_dir: Optional[str] = None) -> str:
                         f"collectives_{name}.json")
 
 
+def resource_path(name: str, goldens_dir: Optional[str] = None) -> str:
+    return os.path.join(goldens_dir or GOLDENS_DIR,
+                        f"resources_{name}.json")
+
+
+def _peak_bytes(compiled) -> Optional[float]:
+    """Compiler peak-memory estimate (arguments + outputs + temps −
+    aliased), or None where the backend doesn't expose the stats."""
+    try:
+        m = compiled.memory_analysis()
+        return float(m.argument_size_in_bytes + m.output_size_in_bytes
+                     + m.temp_size_in_bytes - m.alias_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _load_or_write_golden(path: str, payload: Dict, *,
+                          update: bool) -> Tuple[Optional[Dict], List[str]]:
+    """Shared golden-file plumbing: write ``payload`` under --update-
+    goldens, else load the baseline (missing golden == failure)."""
+    if update:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return None, []
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f), []
+    return None, [f"golden {path} missing — run python -m "
+                  f"repro.analysis.graph_audit --update-goldens and "
+                  f"commit it"]
+
+
 def audit_target(name: str, *, update_goldens: bool = False,
                  goldens_dir: Optional[str] = None) -> Tuple[Dict, List[str]]:
     """Lower one target and apply every rule; returns (facts, failures)."""
@@ -234,27 +275,29 @@ def audit_target(name: str, *, update_goldens: bool = False,
 
     if aux["mesh"] is not None:
         with aux["mesh"]:
-            text = step.lower(*args).compile().as_text()
+            compiled = step.lower(*args).compile()
     else:
-        text = step.lower(*args).compile().as_text()
+        compiled = step.lower(*args).compile()
+    text = compiled.as_text()
 
     golden = None
-    gpath = golden_path(name, goldens_dir)
     census = rules_graph.collective_census(text)
     if name in GOLDEN_TARGETS:
-        if update_goldens:
-            os.makedirs(os.path.dirname(gpath), exist_ok=True)
-            with open(gpath, "w") as f:
-                json.dump(dict(target=name, **census), f, indent=1,
-                          sort_keys=True)
-                f.write("\n")
-        elif os.path.exists(gpath):
-            with open(gpath) as f:
-                golden = json.load(f)
-        else:
-            failures.append(f"GA004: golden {gpath} missing — run "
-                            f"python -m repro.analysis.graph_audit "
-                            f"--update-goldens and commit it")
+        golden, missing = _load_or_write_golden(
+            golden_path(name, goldens_dir), dict(target=name, **census),
+            update=update_goldens)
+        failures.extend(f"GA004: {m}" for m in missing)
+
+    # GA008: compiled cost vs the resource golden
+    resources = rules_graph.resource_census(text,
+                                            peak_bytes=_peak_bytes(compiled))
+    if name in RESOURCE_TARGETS:
+        rgolden, missing = _load_or_write_golden(
+            resource_path(name, goldens_dir), dict(target=name, **resources),
+            update=update_goldens)
+        failures.extend(f"GA008: {m}" for m in missing)
+        if rgolden is not None:
+            failures.extend(rules_graph.diff_resources(resources, rgolden))
 
     # donation floor: every param leaf must alias (opt_state contains
     # small integer counters XLA may legitimately decline to alias, so
@@ -264,7 +307,7 @@ def audit_target(name: str, *, update_goldens: bool = False,
         text, train=train, min_donated=max(min_donated, 1) if train else 0,
         golden=golden)
     failures.extend(rule_failures)
-    facts.update(target=name, train=train,
+    facts.update(target=name, train=train, resources=resources,
                  n_param_leaves=aux["n_param_leaves"],
                  n_state_leaves=aux["n_state_leaves"])
 
@@ -302,8 +345,8 @@ def main(argv=None) -> int:
     ap.add_argument("--targets", default=None,
                     help=f"comma-separated subset of {sorted(TARGETS)}")
     ap.add_argument("--update-goldens", action="store_true",
-                    help="rewrite tests/goldens/ collective baselines "
-                    "from the current graphs")
+                    help="rewrite tests/goldens/ collective + resource "
+                    "baselines from the current graphs")
     ap.add_argument("--goldens-dir", default=None)
     ap.add_argument("--report", default=None,
                     help="write the audit facts to this JSON path")

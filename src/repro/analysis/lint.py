@@ -43,7 +43,12 @@ MASKED_DOMAIN_PREFIXES = (
 # RL004 geography: where kernels live, where oracles live, where the
 # kernel-vs-ref tests live.
 KERNEL_DIR = "repro/kernels"
-KERNEL_EXEMPT = ("ref.py", "ops.py", "__init__.py")
+# ref.py holds the oracles themselves; ops.py re-wraps kernels that are
+# already paired; dispatch.py / instrument.py are the shared
+# interpret-dispatch and sanitizer-capture plumbing (instrument defines
+# a public ``pallas_call`` wrapper that is not itself a kernel).
+KERNEL_EXEMPT = ("ref.py", "ops.py", "__init__.py", "dispatch.py",
+                 "instrument.py")
 ORACLE_FILE = "repro/kernels/ref.py"
 
 
@@ -191,6 +196,18 @@ def main(argv=None) -> int:
         print("RL004  every Pallas kernel needs a _ref oracle and a "
               "kernel-vs-ref test")
         return 0
+    # a lint run that silently scans nothing is worse than a failing one:
+    # a typo'd CI path would report "0 violations" forever.  Exit 2 (not
+    # the violations-found 1) so callers can tell usage errors apart.
+    missing = [p for p in args.paths if not os.path.exists(p)]
+    if missing:
+        for p in missing:
+            print(f"error: path does not exist: {p}", file=sys.stderr)
+        return 2
+    if not iter_py_files(args.paths):
+        print("error: no .py files found under: "
+              + " ".join(args.paths), file=sys.stderr)
+        return 2
     violations = run_lint(args.paths)
     if args.json:
         print(json.dumps([v.to_json() for v in violations], indent=1))

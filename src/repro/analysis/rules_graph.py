@@ -17,6 +17,8 @@ Rule IDs (catalog + rationale: docs/static_analysis.md):
          in graph_audit against ``launch.sharding`` — nothing to parse)
   GA007  no unintended bf16->f32 promotion in the fused kernels'
          outputs (checked in graph_audit via ``jax.eval_shape``)
+  GA008  compiled resource census (flops, bytes moved, peak memory)
+         must stay within tolerance of the golden baseline
 """
 from __future__ import annotations
 
@@ -128,6 +130,55 @@ def diff_census(actual: Dict, golden: Dict) -> List[str]:
         ca, cg = a.get(kind, 0), g.get(kind, 0)
         if ca != cg:
             out.append(f"GA004: {kind} count {ca} != golden {cg}")
+    return out
+
+
+def resource_census(text: str, peak_bytes: float | None = None) -> Dict:
+    """GA008 facts: trip-count-weighted compiled cost of one graph —
+    flops and bytes moved from ``launch.hlo_analysis.analyze`` (while
+    loops weighted by their trip counts, so a CG body regression is
+    counted cg_iters times), plus the compiler's peak-memory estimate
+    when the driver can supply one (``compiled.memory_analysis()``;
+    None == unavailable on this backend, recorded but never gated)."""
+    a = analyze_hlo(text)
+    return {
+        "flops": float(a["flops"]),
+        "bytes_accessed": float(a["bytes_accessed"]),
+        "peak_bytes": None if peak_bytes is None else float(peak_bytes),
+    }
+
+
+# GA008 gates: generous enough to absorb XLA scheduling noise, tight
+# enough that a forgotten remat / an extra pass over the batch (~2x on
+# some term) cannot hide.
+RESOURCE_KEYS = ("flops", "bytes_accessed", "peak_bytes")
+
+
+def diff_resources(actual: Dict, golden: Dict, *,
+                   rel_tol: float = 0.05) -> List[str]:
+    """GA008 failures: each resource key must stay within ``rel_tol``
+    (relative) of the golden baseline — in BOTH directions, so an
+    intended improvement also forces a golden refresh and the baseline
+    stays honest.  A key missing/None/zero in the golden is recorded but
+    not gated (peak_bytes is backend-dependent)."""
+    out = []
+    for key in RESOURCE_KEYS:
+        g = golden.get(key)
+        if not g:
+            continue
+        a = actual.get(key)
+        if a is None:
+            out.append(f"GA008: {key} unmeasurable here but golden has "
+                       f"{g:.4g} — regenerate the golden on this backend")
+            continue
+        rel = (a - g) / g
+        if abs(rel) > rel_tol:
+            direction = "regressed" if rel > 0 else "improved"
+            out.append(
+                f"GA008: {key} {direction} {rel:+.1%} vs golden "
+                f"({a:.4g} vs {g:.4g}, tol ±{rel_tol:.0%}) — if intended, "
+                f"rerun python -m repro.analysis.graph_audit "
+                f"--update-goldens and commit the diff")
     return out
 
 

@@ -1,0 +1,365 @@
+"""Pillar 3: the kernel sanitizer.
+
+    python -m repro.analysis.sanitize_kernels [--report sanitizer_report.json]
+    python -m repro.analysis.sanitize_kernels --self-test
+
+Verifies the whole ``src/repro/kernels/`` layer without hardware:
+
+  1. a *dynamic pass* runs every public kernel in interpret mode over
+     the adversarial lattice corpus (``repro.analysis.corpus``: zero-arc
+     utterance, single-level DAG, max fan-in, fully-padded batch row —
+     each in f32 and bf16), capturing every launch via
+     ``kernels.instrument.capture_calls`` and applying the
+     ``rules_kernel`` checks: KS001 grid/BlockSpec/index-map structure,
+     KS002 frontier invariants, KS003 gather bounds on the concrete
+     index operands, KS004 oracle agreement + NaN/inf finiteness;
+  2. a *precision-flow audit* (KS005) abstract-evaluates each wrapper
+     under bf16 inputs and asserts the lse/cumsum/<r,r> accumulations
+     stay f32.
+
+The point (ROADMAP's riskiest open item): interpret mode — the only
+mode CPU CI can run — silently CLAMPS out-of-bounds gathers that
+compiled TPU/GPU turns into garbage reads, and the NGHF premise of few,
+expensive, trusted CG iterations collapses if a curvature or loss
+kernel returns garbage.  KS003 recovers the compiled-mode failure class
+on CPU by checking the captured index operands against the buffers they
+gather from.
+
+``--self-test`` additionally proves the teeth are real: the seeded
+mutants in ``tests/fixtures/sanitizer/`` (an off-by-one frontier gather
+and a bf16 lse accumulation) must BOTH be flagged, and the real kernels
+must be clean.  CI runs it as the seeded-mutation smoke step.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import importlib.util
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import corpus, rules_kernel
+from repro.kernels import ref
+from repro.kernels.cg_fused import cg_fused_update
+from repro.kernels.instrument import capture_calls
+from repro.kernels.lattice_fb import (NEG, dag_backward, dag_forward,
+                                      dag_loss_only, sausage_backward,
+                                      sausage_forward, sausage_loss_only)
+from repro.kernels.swa_attention import swa_attention
+from repro.losses.lattice import lattice_frontiers
+
+FIXTURES_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "tests", "fixtures", "sanitizer")
+_KAPPA = 0.5
+
+
+def _log_probs(lat, T, K, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    B = int(np.asarray(lat.arc_mask).shape[0])
+    lp = jax.nn.log_softmax(jnp.asarray(
+        rng.normal(0.0, 1.0, size=(B, T, K)).astype(np.float32)), axis=-1)
+    return lp.astype(dtype)
+
+
+def _sausage_layout(lat, log_probs):
+    """(scores, corr, mask) in (B, S, W) sausage layout via the oracles'
+    own gather helpers — shared input construction for the kernel pair."""
+    score_arc = ref.sausage_arc_scores_ref(
+        log_probs, lat.start_t, lat.end_t, lat.label, _KAPPA) \
+        + lat.lm.astype(jnp.float32)
+    scores = ref.gather_sausage_ref(score_arc, lat.level_arcs, 0.0)
+    co = ref.gather_sausage_ref(lat.corr.astype(jnp.float32),
+                                lat.level_arcs, 0.0)
+    mk = ref.gather_sausage_ref(lat.arc_mask.astype(jnp.float32),
+                                lat.level_arcs, 0.0)
+    return scores, co, mk
+
+
+def _dag_layout(lat, log_probs):
+    """(own, corr, start, ok, final) in (B, L, W) level-major layout —
+    shared input construction for the general-DAG kernel pair."""
+    score_arc = ref.sausage_arc_scores_ref(
+        log_probs, lat.start_t, lat.end_t, lat.label, _KAPPA) \
+        + lat.lm.astype(jnp.float32)
+    own = ref.gather_sausage_ref(score_arc, lat.level_arcs, NEG)
+    co = ref.gather_sausage_ref(lat.corr.astype(jnp.float32),
+                                lat.level_arcs, 0.0)
+    ok = ref.gather_sausage_ref(lat.arc_mask.astype(jnp.float32),
+                                lat.level_arcs, 0.0)
+    st = ref.gather_sausage_ref(lat.is_start.astype(jnp.float32),
+                                lat.level_arcs, 0.0) * ok
+    fin = ref.gather_sausage_ref(lat.is_final.astype(jnp.float32),
+                                 lat.level_arcs, 0.0) * ok
+    return own, co, st, ok, fin
+
+
+def _loss_only_args(lat, log_probs):
+    return (log_probs, lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+            lat.arc_mask)
+
+
+def _check_records(records) -> List[str]:
+    fails: List[str] = []
+    for r in records:
+        fails.extend(rules_kernel.check_call_structure(r))
+        fails.extend(rules_kernel.check_gather_bounds(r))
+    return fails
+
+
+def _sanitize_case(name: str, case_fn) -> Tuple[Dict, List[str]]:
+    """Run every lattice kernel over one corpus case (f32 + bf16 inputs),
+    capture the launches, and apply KS001–KS004."""
+    lat, T, K = case_fn()
+    fr = lattice_frontiers(lat)
+    failures = rules_kernel.check_frontier_invariants(lat, fr)
+    n_calls = 0
+    kernels_seen = set()
+    for dtag, dtype, atol in (("f32", jnp.float32, 1e-4),
+                              ("bf16", jnp.bfloat16, 1e-2)):
+        lp = _log_probs(lat, T, K, seed=7, dtype=dtype)
+        scores, co, mk = _sausage_layout(lat, lp)
+        own, dco, st, ok, fin = _dag_layout(lat, lp)
+        with capture_calls() as recs:
+            fwd = sausage_forward(scores, co, mk)
+            bwd = sausage_backward(scores, co, mk)
+            s_lo = sausage_loss_only(*_loss_only_args(lat, lp),
+                                     lat.level_arcs, kappa=_KAPPA)
+            d_fwd = dag_forward(own, dco, st, ok, fin, fr.pidx)
+            d_bwd = dag_backward(own, dco, fin, ok, fr.sidx)
+            d_lo = dag_loss_only(*_loss_only_args(lat, lp), lat.is_start,
+                                 lat.is_final, lat.level_arcs, fr.pidx,
+                                 kappa=_KAPPA)
+        failures.extend(f"[{dtag}] {f}" for f in _check_records(recs))
+        n_calls += len(recs)
+        kernels_seen.update(r.name for r in recs)
+
+        pairs = [
+            ("sausage_forward", fwd,
+             ref.sausage_forward_ref(scores, co, mk),
+             ("alpha", "c_alpha", "logZ", "c_avg")),
+            ("sausage_backward", bwd,
+             ref.sausage_backward_ref(scores, co, mk),
+             ("beta", "c_beta")),
+            ("sausage_loss_only", s_lo,
+             ref.sausage_loss_only_ref(*_loss_only_args(lat, lp),
+                                       lat.level_arcs, kappa=_KAPPA),
+             ("logZ", "c_avg")),
+            ("dag_forward", d_fwd,
+             ref.dag_forward_ref(own, dco, st, ok, fin, fr.pidx),
+             ("alpha", "c_alpha", "logZ", "c_avg")),
+            ("dag_backward", d_bwd,
+             ref.dag_backward_ref(own, dco, fin, ok, fr.sidx),
+             ("beta", "c_beta")),
+            ("dag_loss_only", d_lo,
+             ref.dag_loss_only_ref(*_loss_only_args(lat, lp),
+                                   lat.is_start, lat.is_final,
+                                   lat.level_arcs, fr.pidx, kappa=_KAPPA),
+             ("logZ", "c_avg")),
+        ]
+        for kname, got, want, labels in pairs:
+            tag = f"{kname}[{dtag}]"
+            failures.extend(rules_kernel.check_finite(tag, got,
+                                                      labels=labels))
+            failures.extend(rules_kernel.diff_outputs(
+                tag, got, want, atol=atol, rtol=atol, labels=labels))
+    facts = {"calls": n_calls, "kernels": sorted(kernels_seen),
+             "frontier_shape": list(np.asarray(lat.level_arcs).shape)}
+    return facts, failures
+
+
+def _sanitize_vector_kernels() -> Tuple[Dict, List[str]]:
+    """swa_attention and cg_fused_update over small shapes (f32 + bf16):
+    structure + oracle checks for the non-lattice kernels."""
+    failures: List[str] = []
+    rng = np.random.default_rng(3)
+    n_calls = 0
+    kernels_seen = set()
+    for dtag, dtype, atol in (("f32", jnp.float32, 1e-4),
+                              ("bf16", jnp.bfloat16, 3e-2)):
+        q, k, v = (jnp.asarray(rng.normal(0, 1, (2, 16, 2, 8))
+                               .astype(np.float32)).astype(dtype)
+                   for _ in range(3))
+        x, vv, r, bv = (jnp.asarray(rng.normal(0, 1, (100,))
+                                    .astype(np.float32)).astype(dtype)
+                        for _ in range(4))
+        with capture_calls() as recs:
+            o = swa_attention(q, k, v, window=8, block_q=8, block_kv=8)
+            cg = cg_fused_update(0.25, x, vv, r, bv, block=32)
+        failures.extend(f"[{dtag}] {f}" for f in _check_records(recs))
+        n_calls += len(recs)
+        kernels_seen.update(rec.name for rec in recs)
+        failures.extend(rules_kernel.check_finite(
+            f"swa_attention[{dtag}]", [o], labels=["o"]))
+        failures.extend(rules_kernel.diff_outputs(
+            f"swa_attention[{dtag}]", [o],
+            [ref.swa_attention_ref(q, k, v, 8)], atol=atol, rtol=atol,
+            labels=["o"]))
+        failures.extend(rules_kernel.diff_outputs(
+            f"cg_fused_update[{dtag}]", cg,
+            ref.cg_fused_update_ref(0.25, x, vv, r, bv), atol=atol,
+            rtol=atol, labels=("x", "r", "rr")))
+    return {"calls": n_calls, "kernels": sorted(kernels_seen)}, failures
+
+
+def check_precision_flow() -> List[str]:
+    """KS005 over every wrapper: bf16 inputs must keep the lse/cumsum
+    outputs and the <r,r> accumulator in f32 (bf16 iterates stay bf16)."""
+    f32, bf16 = jnp.float32, jnp.bfloat16
+    lat, T, K = corpus.padded_row_case()
+    fr = lattice_frontiers(lat)
+    lp = jax.ShapeDtypeStruct(
+        (np.asarray(lat.arc_mask).shape[0], T, K), bf16)
+    sc = jax.ShapeDtypeStruct((2, 3, 4), bf16)
+    failures: List[str] = []
+    failures.extend(rules_kernel.check_output_dtypes(
+        "sausage_forward[bf16]", sausage_forward, (sc, sc),
+        [("alpha", f32), ("c_alpha", f32), ("logZ", f32), ("c_avg", f32)]))
+    failures.extend(rules_kernel.check_output_dtypes(
+        "sausage_loss_only[bf16]",
+        functools.partial(sausage_loss_only, kappa=_KAPPA),
+        (lp, lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+         lat.arc_mask, lat.level_arcs),
+        [("logZ", f32), ("c_avg", f32)]))
+    failures.extend(rules_kernel.check_output_dtypes(
+        "dag_loss_only[bf16]",
+        functools.partial(dag_loss_only, kappa=_KAPPA),
+        (lp, lat.start_t, lat.end_t, lat.label, lat.lm, lat.corr,
+         lat.arc_mask, lat.is_start, lat.is_final, lat.level_arcs,
+         fr.pidx),
+        [("logZ", f32), ("c_avg", f32)]))
+    bfv = jax.ShapeDtypeStruct((64,), bf16)
+    failures.extend(rules_kernel.check_output_dtypes(
+        "cg_fused_update[bf16]",
+        functools.partial(cg_fused_update, block=32),
+        (jnp.float32(0.5), bfv, bfv, bfv, bfv),
+        [("x", bf16), ("r", bf16), ("rr", f32)]))
+    qkv = jax.ShapeDtypeStruct((1, 16, 1, 8), bf16)
+    failures.extend(rules_kernel.check_output_dtypes(
+        "swa_attention[bf16]",
+        functools.partial(swa_attention, window=8, block_q=8, block_kv=8),
+        (qkv, qkv, qkv), [("o", bf16)]))
+    return failures
+
+
+def run_sanitize() -> Tuple[Dict, List[str]]:
+    """The full sanitizer: dynamic corpus pass + precision-flow audit.
+    Returns (report, failures); failures empty == kernels layer clean."""
+    report: Dict = {"cases": {}, "failures": []}
+    failures: List[str] = []
+    for name in sorted(corpus.ADVERSARIAL_CASES):
+        facts, fs = _sanitize_case(name, corpus.ADVERSARIAL_CASES[name])
+        report["cases"][name] = facts
+        failures.extend(f"[{name}] {f}" for f in fs)
+    facts, fs = _sanitize_vector_kernels()
+    report["cases"]["vector_kernels"] = facts
+    failures.extend(f"[vector_kernels] {f}" for f in fs)
+    fs = check_precision_flow()
+    report["precision_flow_ok"] = not fs
+    failures.extend(f"[precision] {f}" for f in fs)
+    report["failures"] = failures
+    return report, failures
+
+
+# ---------------------------------------------------------------------------
+# self-test: the seeded mutants must be flagged, the real kernels clean
+# ---------------------------------------------------------------------------
+
+def _load_fixture(name: str):
+    path = os.path.join(FIXTURES_DIR, f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"sanitizer_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def self_test(*, check_clean: bool = True) -> List[str]:
+    """Prove the sanitizer has teeth.  Returns a list of self-test
+    problems (empty == the mutation test passes): the seeded off-by-one
+    frontier gather and the bf16 lse accumulation fixtures must BOTH be
+    flagged, and (unless the caller just ran the sweep itself,
+    ``check_clean=False``) the real kernels must come back clean."""
+    problems: List[str] = []
+
+    # mutant 1: off-by-one frontier gather -> KS003
+    bad_gather = _load_fixture("bad_gather")
+    lat, T, K = corpus.max_fanin_case()
+    fr = lattice_frontiers(lat)
+    lp = _log_probs(lat, T, K, seed=11)
+    own, co, st, ok, fin = _dag_layout(lat, lp)
+    with capture_calls() as recs:
+        bad_gather.bad_dag_forward(own, co, st, ok, fin, fr.pidx)
+    flagged = _check_records(recs)
+    if not any("KS003" in f for f in flagged):
+        problems.append("self-test: seeded off-by-one frontier gather "
+                        "(fixtures/sanitizer/bad_gather.py) was NOT "
+                        "flagged by KS003")
+
+    # mutant 2: bf16 lse accumulation -> KS005
+    bad_precision = _load_fixture("bad_precision")
+    lat2, T2, K2 = corpus.padded_row_case()
+    lp2 = jax.ShapeDtypeStruct(
+        (np.asarray(lat2.arc_mask).shape[0], T2, K2), jnp.bfloat16)
+    flagged = rules_kernel.check_output_dtypes(
+        "bad_sausage_loss_only[bf16]",
+        functools.partial(bad_precision.bad_sausage_loss_only,
+                          kappa=_KAPPA),
+        (lp2, lat2.start_t, lat2.end_t, lat2.label, lat2.lm, lat2.corr,
+         lat2.arc_mask, lat2.level_arcs),
+        [("logZ", jnp.float32), ("c_avg", jnp.float32)])
+    if not any("KS005" in f for f in flagged):
+        problems.append("self-test: seeded bf16 lse accumulation "
+                        "(fixtures/sanitizer/bad_precision.py) was NOT "
+                        "flagged by KS005")
+
+    # the real kernels must be clean with the same rules
+    if check_clean:
+        _, failures = run_sanitize()
+        if failures:
+            problems.append(f"self-test: real kernels are NOT clean "
+                            f"({len(failures)} failures, first: "
+                            f"{failures[0]})")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.sanitize_kernels",
+        description="hardware-free verification of the Pallas kernel "
+                    "layer (rule catalog: docs/static_analysis.md)")
+    ap.add_argument("--report", default=None,
+                    help="write the sanitizer facts to this JSON path")
+    ap.add_argument("--self-test", action="store_true",
+                    help="also require the seeded mutant fixtures to be "
+                    "flagged (CI's mutation smoke step)")
+    args = ap.parse_args(argv)
+    report, failures = run_sanitize()
+    problems: List[str] = []
+    if args.self_test:
+        # the sweep above IS the clean check; only the mutants remain
+        problems = self_test(check_clean=False)
+        report["self_test_problems"] = problems
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+    for f in failures:
+        print(f"FAIL {f}")
+    for p in problems:
+        print(f"FAIL {p}")
+    n_calls = sum(c.get("calls", 0) for c in report["cases"].values())
+    print(f"kernel sanitizer: {len(failures)} failures over "
+          f"{len(report['cases'])} corpus cases ({n_calls} captured "
+          f"launches)"
+          + (f", self-test {'ok' if not problems else 'FAIL'}"
+             if args.self_test else ""))
+    return 1 if (failures or problems) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,11 +18,12 @@ tree reduction, deterministic).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import instrument
+from repro.kernels.dispatch import resolve_interpret
 
 
 def _cg_kernel(alpha_ref, x_ref, v_ref, r_ref, bv_ref,
@@ -40,8 +41,11 @@ def _cg_kernel(alpha_ref, x_ref, v_ref, r_ref, bv_ref,
 
 
 def cg_fused_update(alpha, x, v, r, bv, *, block: int = 65536,
-                    interpret: bool = True):
-    """Flat f32/bf16 arrays (N,) -> (x_new, r_new, rr scalar)."""
+                    interpret: bool | None = None):
+    """Flat f32/bf16 arrays (N,) -> (x_new, r_new, rr scalar).
+
+    ``interpret=None`` auto-detects via ``kernels.dispatch``: compiled on
+    TPU (or ``REPRO_PALLAS_COMPILED=1``), interpreter elsewhere."""
     (N,) = x.shape
     pad = (-N) % block
     if pad:
@@ -49,7 +53,7 @@ def cg_fused_update(alpha, x, v, r, bv, *, block: int = 65536,
     n_blocks = (N + pad) // block
     alpha_arr = jnp.full((1,), alpha, jnp.float32)
 
-    x_new, r_new, rr = pl.pallas_call(
+    x_new, r_new, rr = instrument.pallas_call(
         _cg_kernel,
         grid=(n_blocks,),
         in_specs=[
@@ -69,6 +73,6 @@ def cg_fused_update(alpha, x, v, r, bv, *, block: int = 65536,
             jax.ShapeDtypeStruct((N + pad,), r.dtype),
             jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(alpha_arr, x, v, r, bv)
     return x_new[:N], r_new[:N], rr.sum()

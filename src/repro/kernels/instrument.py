@@ -1,0 +1,105 @@
+"""Capture hook around ``pl.pallas_call`` for the kernel sanitizer.
+
+Every kernel module in this package routes its launches through
+:func:`pallas_call` below — a zero-overhead pass-through to
+``jax.experimental.pallas.pallas_call`` unless a capture context is
+active.  Inside ``capture_calls()``, each invocation additionally
+records a :class:`KernelCall` — the kernel's name, grid, Block specs,
+output shapes and the *concrete* operands it was launched on — which is
+what ``repro.analysis.rules_kernel`` runs its structural and
+gather-bounds checks against.  The record is taken at the invocation
+boundary (before tracing), so the sanitizer sees the exact index
+tensors a compiled TPU launch would gather with; in-kernel values are
+tracers and cannot be inspected from the host.
+
+Capture is process-global and not thread-safe — it exists for the
+sanitizer and tests, which run kernels eagerly and serially.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.experimental import pallas as pl
+
+
+@dataclass
+class KernelCall:
+    """One captured Pallas launch (see module docstring)."""
+
+    name: str                      # kernel function name (partial unwrapped)
+    grid: Optional[Tuple[int, ...]]
+    in_specs: Optional[list]       # pl.BlockSpec list (None when defaulted)
+    out_specs: Optional[list]
+    out_shape: Any                 # jax.ShapeDtypeStruct pytree
+    interpret: Any
+    operands: Tuple = ()           # concrete operand arrays (tracers dropped)
+    operand_shapes: List[Tuple[int, ...]] = field(default_factory=list)
+    operand_dtypes: List[str] = field(default_factory=list)
+
+
+_RECORDS: Optional[List[KernelCall]] = None
+
+
+@contextlib.contextmanager
+def capture_calls():
+    """Collect a :class:`KernelCall` per launch inside the block."""
+    global _RECORDS
+    prev, _RECORDS = _RECORDS, []
+    try:
+        yield _RECORDS
+    finally:
+        _RECORDS = prev
+
+
+def _kernel_name(kernel) -> str:
+    inner = getattr(kernel, "func", kernel)        # functools.partial
+    return getattr(inner, "__name__", repr(kernel))
+
+
+def _spec_list(specs) -> Optional[list]:
+    """pallas_call accepts a single BlockSpec or a sequence of them;
+    normalise to a list for the rule checks."""
+    if specs is None:
+        return None
+    if isinstance(specs, (list, tuple)):
+        return list(specs)
+    return [specs]
+
+
+def pallas_call(kernel, *, grid=None, in_specs=None, out_specs=None,
+                out_shape=None, interpret=False, **kwargs):
+    """Drop-in for ``pl.pallas_call`` with sanitizer capture."""
+    call_kwargs = dict(out_shape=out_shape, interpret=interpret, **kwargs)
+    if grid is not None:
+        call_kwargs["grid"] = grid
+    if in_specs is not None:
+        call_kwargs["in_specs"] = in_specs
+    if out_specs is not None:
+        call_kwargs["out_specs"] = out_specs
+    inner = pl.pallas_call(kernel, **call_kwargs)
+    if _RECORDS is None:
+        return inner
+
+    def launch(*operands):
+        concrete = tuple(x for x in operands
+                         if not isinstance(x, jax.core.Tracer))
+        _RECORDS.append(KernelCall(
+            name=_kernel_name(kernel),
+            grid=(grid,) if isinstance(grid, int)
+            else tuple(grid) if grid is not None else None,
+            in_specs=_spec_list(in_specs),
+            out_specs=_spec_list(out_specs),
+            out_shape=out_shape,
+            interpret=interpret,
+            operands=concrete if len(concrete) == len(operands) else (),
+            operand_shapes=[tuple(getattr(x, "shape", ()))
+                            for x in operands],
+            operand_dtypes=[str(getattr(x, "dtype", "?"))
+                            for x in operands],
+        ))
+        return inner(*operands)
+
+    return launch

@@ -73,25 +73,17 @@ ref.sausage_forward_ref / ref.sausage_backward_ref.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU lowering)
 
+from repro.kernels import instrument
+from repro.kernels.dispatch import resolve_interpret
+
 NEG = -1e30
 _EPS = 1e-30
-
-
-def _auto_interpret(interpret: bool | None) -> bool:
-    """Compiled on TPU (or with REPRO_PALLAS_COMPILED=1), interpreter
-    elsewhere, unless explicitly forced by the caller."""
-    if interpret is not None:
-        return interpret
-    if os.environ.get("REPRO_PALLAS_COMPILED") == "1":
-        return False
-    return jax.default_backend() != "tpu"
 
 
 def _fwd_kernel(score_ref, corr_ref, mask_ref, alpha_ref, calpha_ref,
@@ -169,7 +161,7 @@ def sausage_forward(scores, corr, mask=None, *, interpret: bool | None = None):
     if mask is None:
         mask = _ones_mask(scores)
     kernel = functools.partial(_fwd_kernel, num_segments=S)
-    alpha, c_alpha, logz, cavg = pl.pallas_call(
+    alpha, c_alpha, logz, cavg = instrument.pallas_call(
         kernel,
         grid=(B,),
         in_specs=[
@@ -189,7 +181,7 @@ def sausage_forward(scores, corr, mask=None, *, interpret: bool | None = None):
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(scores, corr, mask.astype(jnp.float32))
     return alpha, c_alpha, logz[:, 0], cavg[:, 0]
 
@@ -296,13 +288,13 @@ def sausage_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
                      arc_mask.astype(jnp.float32)], axis=1)    # (B, 4, A)
     kernel = functools.partial(_loss_only_kernel, num_segments=S,
                                num_arcs=A)
-    logz, cavg = pl.pallas_call(
+    logz, cavg = instrument.pallas_call(
         kernel,
         out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.float32),
             jax.ShapeDtypeStruct((B,), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(cumext, idx, fcs, level_arcs.astype(jnp.int32))
     return logz, cavg
 
@@ -440,7 +432,7 @@ def dag_forward(own, corr, start, ok, final, pidx, *,
     B, L, W = own.shape
     P = pidx.shape[-1]
     kernel = functools.partial(_dag_fwd_kernel, num_levels=L, width=W)
-    alpha, c_alpha, logz, cavg = pl.pallas_call(
+    alpha, c_alpha, logz, cavg = instrument.pallas_call(
         kernel,
         grid=(B,),
         in_specs=[
@@ -463,7 +455,7 @@ def dag_forward(own, corr, start, ok, final, pidx, *,
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(own.astype(jnp.float32), corr.astype(jnp.float32),
       start.astype(jnp.float32), ok.astype(jnp.float32),
       final.astype(jnp.float32), pidx.astype(jnp.int32))
@@ -479,7 +471,7 @@ def dag_backward(own, corr, final, ok, sidx, *,
     B, L, W = own.shape
     S = sidx.shape[-1]
     kernel = functools.partial(_dag_bwd_kernel, num_levels=L, width=W)
-    beta, c_beta = pl.pallas_call(
+    beta, c_beta = instrument.pallas_call(
         kernel,
         grid=(B,),
         in_specs=[
@@ -497,7 +489,7 @@ def dag_backward(own, corr, final, ok, sidx, *,
             jax.ShapeDtypeStruct((B, L, W), jnp.float32),
             jax.ShapeDtypeStruct((B, L, W), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(own.astype(jnp.float32), corr.astype(jnp.float32),
       final.astype(jnp.float32), ok.astype(jnp.float32),
       sidx.astype(jnp.int32))
@@ -603,13 +595,13 @@ def dag_loss_only(log_probs, start, end, label, lm, corr, arc_mask,
                      is_final.astype(jnp.float32)], axis=1)    # (B, 6, A)
     kernel = functools.partial(_dag_loss_only_kernel, num_levels=L,
                                width=W, num_arcs=A)
-    logz, cavg = pl.pallas_call(
+    logz, cavg = instrument.pallas_call(
         kernel,
         out_shape=[
             jax.ShapeDtypeStruct((B,), jnp.float32),
             jax.ShapeDtypeStruct((B,), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(cumext, idx, fcs, level_arcs.astype(jnp.int32),
       pidx.astype(jnp.int32))
     return logz, cavg
@@ -626,7 +618,7 @@ def sausage_backward(scores, corr, mask=None, *,
     if mask is None:
         mask = _ones_mask(scores)
     kernel = functools.partial(_bwd_kernel, num_segments=S)
-    beta, c_beta = pl.pallas_call(
+    beta, c_beta = instrument.pallas_call(
         kernel,
         grid=(B,),
         in_specs=[
@@ -642,6 +634,6 @@ def sausage_backward(scores, corr, mask=None, *,
             jax.ShapeDtypeStruct((B, S, A), jnp.float32),
             jax.ShapeDtypeStruct((B, S, A), jnp.float32),
         ],
-        interpret=_auto_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(scores, corr, mask.astype(jnp.float32))
     return beta, c_beta

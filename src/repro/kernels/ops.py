@@ -1,20 +1,17 @@
 """Jitted public wrappers for the Pallas kernels.
 
-The lattice (sausage) kernels auto-detect their mode: compiled on TPU
-backends, interpret elsewhere (set ``REPRO_PALLAS_COMPILED=1`` to force
-compiled).  Every wrapper has a pure-jnp fallback (ref.py) that is also
-what the distributed (GSPMD) model paths use — the kernels are the
-single-chip hot-spot implementations.
+Every kernel auto-detects its mode through the ONE dispatch predicate in
+``kernels.dispatch``: compiled on TPU backends, interpret elsewhere (set
+``REPRO_PALLAS_COMPILED=1`` to force compiled).  Every wrapper has a
+pure-jnp fallback (ref.py) that is also what the distributed (GSPMD)
+model paths use — the kernels are the single-chip hot-spot
+implementations.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-import jax.numpy as jnp
-
 from repro.kernels import ref
 from repro.kernels.cg_fused import cg_fused_update as _cg_pallas
+from repro.kernels.dispatch import compiled_backend
 from repro.kernels.lattice_fb import dag_backward as _dag_bwd_pallas
 from repro.kernels.lattice_fb import dag_forward as _dag_fwd_pallas
 from repro.kernels.lattice_fb import dag_loss_only as _dag_loss_only_pallas
@@ -24,14 +21,13 @@ from repro.kernels.lattice_fb import sausage_loss_only as _fb_loss_only_pallas
 from repro.kernels.swa_attention import swa_attention as _swa_pallas
 
 
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
-
-
 def swa_attention(q, k, v, window: int, *, use_pallas: bool = True):
     if not use_pallas:
         return ref.swa_attention_ref(q, k, v, window)
-    return _swa_pallas(q, k, v, window, interpret=_interpret())
+    # interpret=None auto-detects via kernels.dispatch (one source of
+    # truth for every kernel): compiled on TPU or with
+    # REPRO_PALLAS_COMPILED=1, interpreter elsewhere
+    return _swa_pallas(q, k, v, window, interpret=None)
 
 
 def sausage_forward(scores, corr, mask=None, *, use_pallas: bool = True):
@@ -103,13 +99,13 @@ def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool | None = None):
     reduction in one pass over flat (N,) buffers.
 
     ``use_pallas=None`` (the default, what ``core.cg.cg_solve(fused=True)``
-    uses) auto-dispatches: the Pallas kernel where it compiles (TPU, or
-    ``REPRO_PALLAS_COMPILED=1``), the fused pure-jnp reference elsewhere —
-    interpret-mode Pallas would only add per-block overhead on CPU while
-    XLA already fuses the ref's AXPY+dot chain into one loop."""
+    uses) auto-dispatches on ``kernels.dispatch.compiled_backend()``: the
+    Pallas kernel where it compiles (TPU, or ``REPRO_PALLAS_COMPILED=1``),
+    the fused pure-jnp reference elsewhere — interpret-mode Pallas would
+    only add per-block overhead on CPU while XLA already fuses the ref's
+    AXPY+dot chain into one loop."""
     if use_pallas is None:
-        use_pallas = (jax.default_backend() == "tpu"
-                      or os.environ.get("REPRO_PALLAS_COMPILED", "0") == "1")
+        use_pallas = compiled_backend()
     if not use_pallas:
         return ref.cg_fused_update_ref(alpha, x, v, r, bv)
-    return _cg_pallas(alpha, x, v, r, bv, interpret=_interpret())
+    return _cg_pallas(alpha, x, v, r, bv, interpret=None)

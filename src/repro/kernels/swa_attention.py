@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import instrument
+from repro.kernels.dispatch import resolve_interpret
+
 NEG = -1e30
 
 
@@ -74,11 +77,12 @@ def _swa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 
 def swa_attention(q, k, v, window: int, *, block_q: int = 128,
-                  block_kv: int = 128, interpret: bool = True):
+                  block_kv: int = 128, interpret: bool | None = None):
     """q/k/v: (B, T, H, hd) with H == kv heads already repeated.
 
     ``window`` and T must be multiples of the block sizes (callers pad).
-    Returns (B, T, H, hd).
+    Returns (B, T, H, hd).  ``interpret=None`` auto-detects via
+    ``kernels.dispatch`` (compiled on TPU, interpreter elsewhere).
     """
     B, T, H, hd = q.shape
     assert T % block_q == 0 and window % block_kv == 0
@@ -96,7 +100,7 @@ def swa_attention(q, k, v, window: int, *, block_q: int = 128,
         ix = qi * block_q // block_kv - (nw - 1) + wi
         return bh, jnp.clip(ix, 0, T // block_kv - 1), 0
 
-    out = pl.pallas_call(
+    out = instrument.pallas_call(
         functools.partial(_swa_kernel, block_q=block_q, block_kv=block_kv,
                           window=window, seq_len=T),
         grid=(B * H, nq, nw),
@@ -113,6 +117,6 @@ def swa_attention(q, k, v, window: int, *, block_q: int = 128,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qb, kb, vb)
     return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

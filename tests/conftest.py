@@ -38,3 +38,20 @@ def rng():
 @pytest.fixture()
 def key():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Adversarial lattice corpus (repro.analysis.corpus), re-exported as
+# fixtures: the same edge cases the kernel sanitizer sweeps (zero-arc
+# utterance, single-level DAG, max fan-in, fully-padded batch row) so
+# backend-consistency tests can run them through all three
+# ``lattice_stats`` backends.  Importing the corpus does NOT pull in
+# graph_audit, so the no-XLA_FLAGS contract above holds.
+# ---------------------------------------------------------------------------
+from repro.analysis.corpus import ADVERSARIAL_CASES  # noqa: E402
+
+
+@pytest.fixture(params=sorted(ADVERSARIAL_CASES))
+def adversarial_case(request):
+    """(name, (lat, num_frames, num_states)) — one corpus case per id."""
+    return request.param, ADVERSARIAL_CASES[request.param]()

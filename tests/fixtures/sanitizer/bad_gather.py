@@ -1,0 +1,17 @@
+"""Seeded mutant: off-by-one frontier gather (sanitizer self-test).
+
+Shifts every predecessor position by one slot before launching the REAL
+general-DAG forward kernel, so captured ``pidx`` entries reach
+``L*W + 1`` — one past the dump slot at the end of the flattened
+``(L*W + 1,)`` frontier buffer.  Interpret mode (what CPU CI runs)
+silently clamps that read and still produces plausible numbers; a
+compiled TPU/GPU gather reads garbage.  The sanitizer's KS003
+gather-bounds rule on the captured operands must flag it —
+``sanitize_kernels.self_test`` asserts exactly that.
+"""
+from repro.kernels.lattice_fb import dag_forward
+
+
+def bad_dag_forward(own, corr, start, ok, final, pidx, *, interpret=None):
+    return dag_forward(own, corr, start, ok, final, pidx + 1,
+                       interpret=interpret)

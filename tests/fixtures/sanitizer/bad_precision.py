@@ -1,0 +1,20 @@
+"""Seeded mutant: bf16 lse accumulation (sanitizer self-test).
+
+A loss-only wrapper that lets the accumulated quantities leave in the
+input dtype instead of pinning them to f32: under bf16 inputs the logZ
+logsumexp chain and the correctness average come back as bf16 (~8 bits
+of mantissa), which silently poisons the NGHF line search that compares
+candidate losses at small deltas.  The sanitizer's KS005 precision-flow
+audit (``jax.eval_shape`` under bf16 inputs) must flag it —
+``sanitize_kernels.self_test`` asserts exactly that.
+"""
+from repro.kernels.lattice_fb import sausage_loss_only
+
+
+def bad_sausage_loss_only(log_probs, start, end, label, lm, corr,
+                          arc_mask, level_arcs, *, kappa=1.0,
+                          interpret=None):
+    logz, cavg = sausage_loss_only(log_probs, start, end, label, lm,
+                                   corr, arc_mask, level_arcs,
+                                   kappa=kappa, interpret=interpret)
+    return logz.astype(log_probs.dtype), cavg.astype(log_probs.dtype)

@@ -133,3 +133,20 @@ def test_cli_exit_codes(capsys):
     assert '"rule": "RL001"' in out
     clean = os.path.join(SRC, "repro", "analysis")
     assert main([clean]) == 0
+
+
+def test_cli_rejects_nonexistent_and_empty_paths(capsys, tmp_path):
+    """A lint run that scans nothing must be a usage error (exit 2, not
+    a green 0) — a typo'd CI path would otherwise pass forever."""
+    from repro.analysis.lint import main
+    assert main([str(tmp_path / "no_such_dir")]) == 2
+    assert "does not exist" in capsys.readouterr().err
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    (empty / "README.md").write_text("not python\n")
+    assert main([str(empty)]) == 2
+    assert "no .py files" in capsys.readouterr().err
+    # one good path does not excuse a missing one
+    good = os.path.join(SRC, "repro", "analysis", "corpus.py")
+    assert main([good, str(tmp_path / "typo")]) == 2
+    assert main([good]) == 0

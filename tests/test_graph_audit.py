@@ -227,6 +227,73 @@ def test_golden_drift_is_a_failure():
 
 
 # --------------------------------------------------------------------------
+# GA008: resource census + goldens (flops / bytes moved / peak memory)
+# --------------------------------------------------------------------------
+
+def test_resource_census_extracts_compiled_cost():
+    r = rules_graph.resource_census(FUSION_HLO, peak_bytes=1234.0)
+    assert r["bytes_accessed"] == 800.0
+    assert r["flops"] >= 0.0
+    assert r["peak_bytes"] == 1234.0
+    assert rules_graph.resource_census(FUSION_HLO)["peak_bytes"] is None
+
+
+def test_diff_resources_gates_both_directions():
+    golden = {"flops": 1000.0, "bytes_accessed": 5000.0,
+              "peak_bytes": 100.0}
+    assert rules_graph.diff_resources(dict(golden), golden) == []
+    # 4% drift sits inside the default 5% tolerance
+    ok = {"flops": 1040.0, "bytes_accessed": 5000.0, "peak_bytes": 100.0}
+    assert rules_graph.diff_resources(ok, golden) == []
+    up = {"flops": 2000.0, "bytes_accessed": 5000.0, "peak_bytes": 100.0}
+    fails = rules_graph.diff_resources(up, golden)
+    assert len(fails) == 1 and "GA008" in fails[0] \
+        and "regressed" in fails[0]
+    # an IMPROVEMENT beyond tolerance also forces a golden refresh
+    down = {"flops": 1000.0, "bytes_accessed": 2000.0, "peak_bytes": 100.0}
+    fails = rules_graph.diff_resources(down, golden)
+    assert len(fails) == 1 and "improved" in fails[0]
+
+
+def test_diff_resources_ungated_and_unmeasurable_keys():
+    # golden without peak_bytes (None/missing/0): key is not gated
+    golden = {"flops": 1000.0, "bytes_accessed": 5000.0,
+              "peak_bytes": None}
+    actual = {"flops": 1000.0, "bytes_accessed": 5000.0,
+              "peak_bytes": 999999.0}
+    assert rules_graph.diff_resources(actual, golden) == []
+    # golden HAS a value the current backend can't measure: that's drift
+    golden["peak_bytes"] = 100.0
+    actual["peak_bytes"] = None
+    fails = rules_graph.diff_resources(actual, golden)
+    assert len(fails) == 1 and "unmeasurable" in fails[0]
+
+
+def test_resource_goldens_exist_for_three_graphs():
+    from repro.analysis.graph_audit import RESOURCE_TARGETS, resource_path
+    assert len(RESOURCE_TARGETS) >= 3
+    for name in RESOURCE_TARGETS:
+        path = resource_path(name, GOLDENS)
+        assert os.path.exists(path), f"missing resource golden {path}"
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc["target"] == name
+        # a real compiled graph moves bytes and does work
+        assert doc["flops"] > 0 and doc["bytes_accessed"] > 0
+        assert rules_graph.diff_resources(doc, doc) == []
+
+
+def test_resource_golden_drift_is_a_failure():
+    from repro.analysis.graph_audit import RESOURCE_TARGETS, resource_path
+    with open(resource_path(RESOURCE_TARGETS[0], GOLDENS)) as f:
+        golden = json.load(f)
+    drifted = json.loads(json.dumps(golden))
+    drifted["flops"] *= 1.5
+    fails = rules_graph.diff_resources(drifted, golden)
+    assert fails and all("GA008" in f for f in fails)
+
+
+# --------------------------------------------------------------------------
 # donation contract with checkpointing (checkpoint/io.py "assumes
 # donation" — make the assumption real)
 # --------------------------------------------------------------------------

@@ -1,0 +1,217 @@
+"""Kernel sanitizer (repro.analysis pillar 3): rule units on synthetic
+records, the capture hook, the seeded-mutant fixtures, and the full
+corpus sweep."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis import corpus, rules_kernel, sanitize_kernels
+from repro.kernels.instrument import KernelCall, capture_calls
+from repro.losses.lattice import lattice_frontiers
+
+# --------------------------------------------------------------------------
+# KS001: grid / BlockSpec / index-map structure (synthetic records)
+# --------------------------------------------------------------------------
+
+def _call(name="k", grid=(2,), in_specs=None, shapes=(), out_shape=None,
+          out_specs=None, operands=()):
+    return KernelCall(name=name, grid=grid, in_specs=in_specs,
+                      out_specs=out_specs, out_shape=out_shape,
+                      interpret=True, operands=operands,
+                      operand_shapes=list(shapes),
+                      operand_dtypes=["float32"] * len(shapes))
+
+
+def test_ks001_gridless_and_sound_calls_are_clean():
+    assert rules_kernel.check_call_structure(_call(grid=None)) == []
+    spec = pl.BlockSpec((1, 3, 4), lambda b: (b, 0, 0))
+    c = _call(grid=(2,), in_specs=[spec], shapes=[(2, 3, 4)])
+    assert rules_kernel.check_call_structure(c) == []
+
+
+def test_ks001_flags_nondividing_block_shape():
+    spec = pl.BlockSpec((1, 3, 3), lambda b: (b, 0, 0))   # 3 !| 4
+    c = _call(grid=(2,), in_specs=[spec], shapes=[(2, 3, 4)])
+    fails = rules_kernel.check_call_structure(c)
+    assert fails and all("KS001" in f for f in fails)
+
+
+def test_ks001_flags_out_of_range_index_map():
+    spec = pl.BlockSpec((1, 3, 4), lambda b: (b + 1, 0, 0))  # b=1 -> 2
+    c = _call(grid=(2,), in_specs=[spec], shapes=[(2, 3, 4)])
+    fails = rules_kernel.check_call_structure(c)
+    assert fails and "index_map" in fails[0]
+
+
+def test_ks001_flags_nonpositive_grid():
+    assert rules_kernel.check_call_structure(_call(grid=(0,)))
+
+
+# --------------------------------------------------------------------------
+# KS002: frontier invariants (real frontiers, then corrupted)
+# --------------------------------------------------------------------------
+
+def test_ks002_real_frontiers_are_clean(adversarial_case):
+    name, (lat, _T, _K) = adversarial_case
+    fr = lattice_frontiers(lat)
+    assert rules_kernel.check_frontier_invariants(lat, fr) == [], name
+
+
+def test_ks002_flags_out_of_buffer_position():
+    lat, _, _ = corpus.max_fanin_case()
+    fr = lattice_frontiers(lat)
+    bad = fr._replace(pidx=fr.pidx + 1)          # escapes the dump slot
+    fails = rules_kernel.check_frontier_invariants(lat, bad)
+    assert any("KS002" in f and "pidx" in f for f in fails)
+
+
+def test_ks002_flags_masked_arc_on_live_slot():
+    lat, _, _ = corpus.padded_row_case()
+    fr = lattice_frontiers(lat)
+    ap = np.asarray(fr.arc_pos).copy()
+    mask = np.asarray(lat.arc_mask)
+    b, a = np.argwhere(~mask)[0]
+    ap[b, a] = 0                                  # dead arc -> live slot
+    fails = rules_kernel.check_frontier_invariants(
+        lat, fr._replace(arc_pos=ap))
+    assert any("masked arcs" in f for f in fails)
+
+
+# --------------------------------------------------------------------------
+# KS003: gather bounds on captured operands (synthetic records)
+# --------------------------------------------------------------------------
+
+def _dag_fwd_record(pidx_max):
+    own = np.zeros((1, 2, 3), np.float32)         # L=2, W=3 -> dump = 6
+    pidx = np.full((1, 2, 3, 2), pidx_max, np.int32)
+    ops = (own, own, own, own, own, pidx)
+    return _call(name="_dag_fwd_kernel", grid=(1,), operands=ops,
+                 shapes=[o.shape for o in ops])
+
+
+def test_ks003_dump_slot_is_legal_one_past_is_not():
+    assert rules_kernel.check_gather_bounds(_dag_fwd_record(6)) == []
+    fails = rules_kernel.check_gather_bounds(_dag_fwd_record(7))
+    assert len(fails) == 1 and "KS003" in fails[0] and "pidx" in fails[0]
+
+
+def test_ks003_skips_unregistered_and_traced_launches():
+    assert rules_kernel.check_gather_bounds(_call(name="_fwd_kernel")) == []
+    rec = _dag_fwd_record(7)
+    rec.operands = ()                             # tracer launch
+    assert rules_kernel.check_gather_bounds(rec) == []
+
+
+# --------------------------------------------------------------------------
+# KS004: finiteness + oracle diff semantics
+# --------------------------------------------------------------------------
+
+def test_ks004_finite_accepts_sentinel_rejects_nan_inf():
+    ok = np.array([0.0, -1e30, -5.0])
+    assert rules_kernel.check_finite("k", [ok]) == []
+    assert rules_kernel.check_finite("k", [np.array([np.nan])])
+    assert rules_kernel.check_finite("k", [np.array([np.inf])])
+
+
+def test_ks004_diff_matches_masked_sentinels():
+    g = np.array([1.0, -1e30])
+    w = np.array([1.0, -9e29])                    # both masked: equal
+    assert rules_kernel.diff_outputs("k", [g], [w]) == []
+    fails = rules_kernel.diff_outputs("k", [np.array([1.0, 2.0])],
+                                      [np.array([1.0, 3.0])])
+    assert len(fails) == 1 and "differs from oracle" in fails[0]
+
+
+# --------------------------------------------------------------------------
+# KS005: precision flow
+# --------------------------------------------------------------------------
+
+def test_ks005_flags_degraded_accumulator():
+    def bad(x):
+        return jnp.cumsum(x).astype(x.dtype)      # stays bf16
+    x = jax.ShapeDtypeStruct((8,), jnp.bfloat16)
+    fails = rules_kernel.check_output_dtypes(
+        "bad", bad, (x,), [("cumsum", jnp.float32)])
+    assert len(fails) == 1 and "KS005" in fails[0]
+    good = rules_kernel.check_output_dtypes(
+        "good", lambda x: jnp.cumsum(x.astype(jnp.float32)), (x,),
+        [("cumsum", jnp.float32)])
+    assert good == []
+
+
+# --------------------------------------------------------------------------
+# the capture hook
+# --------------------------------------------------------------------------
+
+def test_capture_records_launch_facts():
+    from repro.kernels.lattice_fb import sausage_forward
+    scores = jnp.zeros((2, 3, 4))
+    with capture_calls() as recs:
+        sausage_forward(scores, scores, None)
+    assert [r.name for r in recs] == ["_fwd_kernel"]
+    r = recs[0]
+    assert r.grid == (2,) and r.operand_shapes[0] == (2, 3, 4)
+    # eager launch: every operand is concrete, so all were captured
+    assert len(r.operands) == len(r.operand_shapes) > 0
+    assert rules_kernel.check_call_structure(r) == []
+
+
+def test_capture_is_scoped():
+    from repro.kernels import instrument
+    assert instrument._RECORDS is None
+    with capture_calls() as recs:
+        with capture_calls() as inner:
+            pass
+        assert instrument._RECORDS is recs
+    assert instrument._RECORDS is None
+    assert recs == [] and inner == []
+
+
+# --------------------------------------------------------------------------
+# seeded mutants: the sanitizer must flag BOTH fixtures (fast path of the
+# CI mutation smoke step; the real-kernels-clean half is the slow sweep)
+# --------------------------------------------------------------------------
+
+def test_seeded_mutants_are_flagged():
+    assert sanitize_kernels.self_test(check_clean=False) == []
+
+
+def test_bad_gather_fixture_really_is_out_of_bounds():
+    mod = sanitize_kernels._load_fixture("bad_gather")
+    lat, T, K = corpus.max_fanin_case()
+    fr = lattice_frontiers(lat)
+    lp = sanitize_kernels._log_probs(lat, T, K, seed=11)
+    own, co, st, ok, fin = sanitize_kernels._dag_layout(lat, lp)
+    with capture_calls() as recs:
+        mod.bad_dag_forward(own, co, st, ok, fin, fr.pidx)
+    fails = [f for r in recs for f in rules_kernel.check_gather_bounds(r)]
+    assert any("KS003" in f for f in fails)
+    # and the unmutated kernel on the same inputs is clean
+    from repro.kernels.lattice_fb import dag_forward
+    with capture_calls() as recs:
+        dag_forward(own, co, st, ok, fin, fr.pidx)
+    assert [f for r in recs
+            for f in rules_kernel.check_gather_bounds(r)] == []
+
+
+# --------------------------------------------------------------------------
+# the full sweep: every real kernel clean over the whole corpus
+# --------------------------------------------------------------------------
+
+def test_precision_flow_of_real_wrappers():
+    assert sanitize_kernels.check_precision_flow() == []
+
+
+@pytest.mark.slow
+def test_run_sanitize_real_kernels_clean():
+    report, failures = sanitize_kernels.run_sanitize()
+    assert failures == []
+    assert set(report["cases"]) == set(corpus.ADVERSARIAL_CASES) | \
+        {"vector_kernels"}
+    # every corpus case exercised real launches in both dtypes
+    for name, facts in report["cases"].items():
+        assert facts["calls"] > 0, name
+    assert report["precision_flow_ok"]
