@@ -1,0 +1,145 @@
+"""Load harness for the lattice-rescoring service.
+
+Synthetic heavy-traffic workload (Poisson arrivals, mixed lattice
+sizes) through ``repro.serving.service`` in two dispatch modes:
+
+  * ``packed``     — bucket batching (the production path)
+  * ``sequential`` — one request per dispatch (batch=1 buckets), the
+                     baseline the packing has to beat on requests/s
+
+plus a streaming row: fast-path resume (shallow bucket, depth
+proportional to levels grown) vs from-scratch rescoring of a deep
+lattice.  Rows merge into BENCH_lattice.json next to the engine and
+optimiser trajectories.
+
+  PYTHONPATH=src python -m benchmarks.rescoring_bench --budget small \
+      --json-out BENCH_lattice.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.serving import packing
+from repro.serving.service import RescoringService, synthetic_workload
+from repro.serving.streaming import (StreamSession, resume_lattice_dict,
+                                     session_bucket, truncate_levels)
+
+# arrival rates are set well above single-request service rate so the
+# benchmark is service-bound (a queue forms and batching can pay); at
+# low rates both modes just track the Poisson arrival process.
+BUDGETS = {
+    "small": dict(n_requests=32, rate_hz=8000.0, batch=8),
+    "full": dict(n_requests=128, rate_hz=8000.0, batch=8),
+}
+SEED = 0
+KAPPA = 0.5
+
+
+def _run_mode(mode: str, *, n_requests: int, rate_hz: float, batch: int,
+              backend: str) -> dict:
+    reqs = synthetic_workload(SEED, n_requests, rate_hz=rate_hz)
+    b = batch if mode == "packed" else 1
+    buckets = packing.derive_buckets([r.lattice for r in reqs],
+                                     batch=b, tiers=2)
+    svc = RescoringService(buckets, kappa=KAPPA, backend=backend)
+    reqs, m = svc.run(reqs)
+    assert m["completed"] == n_requests, m
+    assert all(v == 1 for v in svc.traces.values()), \
+        f"{mode}: request mix retraced a bucket: {svc.traces}"
+    return {
+        "bench": "rescoring", "mode": mode, "n_requests": n_requests,
+        "rate_hz": rate_hz, "batch": b, "buckets": len(buckets),
+        "dispatches": m["dispatches"],
+        "requests_per_s": round(m["requests_per_s"], 1),
+        "latency_p50_ms": round(m["latency_p50_s"] * 1e3, 3),
+        "latency_p99_ms": round(m["latency_p99_s"] * 1e3, 3),
+        "slot_fill": round(m["slot_fill"], 3),
+        "arc_fill": round(m["arc_fill"], 3),
+    }
+
+
+def _streaming_row(backend: str) -> dict:
+    """Fast-path resume vs from-scratch on a deep sausage: the resumed
+    executable covers ``resume_levels + 1`` levels instead of all of
+    them, so its compute tracks the growth, not the lattice.  Host-side
+    packing is hoisted out of the timed region — the row isolates the
+    kernel cost the shallow bucket saves."""
+    from repro.losses.lattice import batch_lattices, make_sausage_lattice
+
+    rng = np.random.default_rng(SEED)
+    d = make_sausage_lattice(rng, num_frames=64, num_states=6,
+                             seg_len=2, n_alt=2)         # 32 levels
+    lp = rng.normal(0, 1, (64, 6)).astype(np.float32)
+    lp = lp - np.log(np.exp(lp).sum(-1, keepdims=True))
+    L = d["level_arcs"].shape[0]
+    grow = 4
+    sess = StreamSession(session_bucket(d), kappa=KAPPA, backend=backend,
+                         resume_levels=grow)
+    sess.rescore(truncate_levels(d, L - grow), lp)       # checkpoint
+    done, alpha, c_alpha = sess.checkpoint
+    rd = resume_lattice_dict(packing.pad_to_bucket(d, sess.spec),
+                             done, alpha, c_alpha)
+    shallow = sess.spec._replace(num_levels=grow + 1)
+    lat_resume = batch_lattices([packing.pad_to_bucket(rd, shallow)])
+    lat_full = batch_lattices([packing.pad_to_bucket(d, sess.spec)])
+    lp_b = packing.pack_log_probs([lp], sess.spec)
+    us_resume = time_call(sess._fn, lat_resume, lp_b)
+    us_scratch = time_call(sess._fn, lat_full, lp_b)
+    return {
+        "bench": "rescoring_streaming", "backend": backend,
+        "levels_total": int(L), "levels_resumed": grow + 1,
+        "us_resume": round(us_resume, 1),
+        "us_scratch": round(us_scratch, 1),
+        "speedup": round(us_scratch / max(us_resume, 1e-9), 2),
+    }
+
+
+def run(budget: str = "small", json_out: str | None = None,
+        backend: str = "auto"):
+    params = BUDGETS[budget]
+    json_rows = []
+    packed = _run_mode("packed", backend=backend, **params)
+    sequential = _run_mode("sequential", backend=backend, **params)
+    packed["speedup_vs_sequential"] = round(
+        packed["requests_per_s"] / max(sequential["requests_per_s"], 1e-9),
+        2)
+    json_rows += [packed, sequential]
+    if packed["requests_per_s"] <= sequential["requests_per_s"]:
+        raise SystemExit(
+            f"packed dispatch ({packed['requests_per_s']} req/s) did not "
+            f"beat sequential ({sequential['requests_per_s']} req/s)")
+    json_rows.append(_streaming_row(backend))
+    for rec in json_rows:
+        print(json.dumps(rec))
+
+    if json_out:
+        # merge into the shared trajectory file (one CI artifact for the
+        # engine, optimiser, and serving benches)
+        doc = {"bench": "lattice_engine", "budget": budget,
+               "device": "cpu", "rows": []}
+        if os.path.exists(json_out):
+            with open(json_out) as f:
+                doc = json.load(f)
+        doc["rows"] = [r for r in doc.get("rows", [])
+                       if r.get("bench") not in ("rescoring",
+                                                 "rescoring_streaming")
+                       ] + json_rows
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"# merged {len(json_rows)} rescoring rows into {json_out}")
+    return json_rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", default="small", choices=sorted(BUDGETS))
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--json-out", default=None,
+                    help="merge JSON rows into e.g. BENCH_lattice.json")
+    args = ap.parse_args()
+    run(args.budget, args.json_out, args.backend)

@@ -139,9 +139,28 @@ def padded_row_case(seed: int = 0) -> Case:
     return batch_lattices([real, empty]), _T, _K
 
 
+def packed_bucket_case(seed: int = 0) -> Case:
+    """A serving-layer bucket dispatch: two heterogeneous request
+    lattices packed into one bucket-shaped batch with an idle slot —
+    every dimension (arcs, frames, levels, level width, fan) is padded
+    up, so the kernels see -1 level rows, masked pad arcs, AND a fully
+    empty lane in the same launch (``repro.serving.packing``)."""
+    from repro.serving import packing
+
+    rng = np.random.default_rng(seed)
+    small = make_sausage_lattice(rng, num_frames=_T, num_states=_K,
+                                 seg_len=4, n_alt=2)
+    big = make_sausage_lattice(rng, num_frames=_T, num_states=_K,
+                               seg_len=2, n_alt=3)
+    spec = packing.derive_buckets([small, big], batch=3, tiers=1)[0]
+    lat, _ = packing.pack_requests([small, big], spec)
+    return lat, _T, _K
+
+
 ADVERSARIAL_CASES: Dict[str, object] = {
     "zero_arc": zero_arc_case,
     "single_level": single_level_case,
     "max_fanin": max_fanin_case,
     "padded_row": padded_row_case,
+    "packed_bucket": packed_bucket_case,
 }

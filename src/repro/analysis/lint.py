@@ -30,6 +30,9 @@ TRACED_PREFIXES = (
     "repro/losses/",
     "repro/core/",
     "repro/models/",
+    # serving: the dispatch closures run under jit; the host-side
+    # packing/queueing helpers carry '# reprolint: host' markers
+    "repro/serving/",
 )
 
 # modules whose reduction axes are padded arc/frontier axes — raw

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs.base import get_config, list_archs
 from repro.models.registry import get_model
+from repro.serving.metrics import latency_summary
 
 
 class Request:
@@ -37,13 +38,20 @@ def serve(cfg, model, params, requests, *, cache_len=256, greedy=True,
           long_mode=False, temperature=1.0, seed=0):
     """Run all requests to completion with a shared batched decode step.
 
-    Returns the list of Requests with ``generated`` filled in.  Slots all
-    advance in lock-step positions (left-padded semantics would need a
-    per-slot position; kept single-position for cache simplicity and noted
-    as a serving-layer simplification).
+    Returns the list of Requests with ``generated`` filled in, plus a
+    metrics dict with throughput (``tokens_per_s``) and per-request
+    wall-clock completion latency (``latency_p50_s``/``latency_p99_s``,
+    measured from serve start to the step that finishes the request).
+    Slots all advance in lock-step positions (left-padded semantics would
+    need a per-slot position; kept single-position for cache simplicity).
+    The request-shaped batching discipline — admission control, bucketed
+    slot assignment, deadlines — lives in ``repro.serving.service``; this
+    loop stays the minimal token-decode counterpart.
     """
     if not requests:
-        return requests, {"tokens_per_s": 0.0, "wall_s": 0.0, "steps": 0}
+        return requests, {"tokens_per_s": 0.0, "wall_s": 0.0, "steps": 0,
+                          "latency_p50_s": float("nan"),
+                          "latency_p99_s": float("nan")}
     B = len(requests)
     cache = model.init_cache(B, cache_len, long_mode=long_mode)
     step = jax.jit(
@@ -55,6 +63,7 @@ def serve(cfg, model, params, requests, *, cache_len=256, greedy=True,
     tokens = jnp.zeros((B, 1), jnp.int32)
     t0 = time.time()
     n_tok = 0
+    latencies = []
     for pos in range(max_steps):
         feed = []
         n_live = 0
@@ -86,11 +95,16 @@ def serve(cfg, model, params, requests, *, cache_len=256, greedy=True,
             r.generated.append(int(nxt[i]))
             if len(r.generated) >= r.max_new:
                 r.done = True
+                latencies.append(time.time() - t0)
         if all(r.done for r in requests):
             break
     dt = time.time() - t0
-    return requests, {"tokens_per_s": n_tok / max(dt, 1e-9),
-                      "wall_s": dt, "steps": pos + 1}
+    # requests still live when max_steps ran out completed at loop exit
+    latencies += [dt] * (len(requests) - len(latencies))
+    metrics = {"tokens_per_s": n_tok / max(dt, 1e-9),
+               "wall_s": dt, "steps": pos + 1}
+    metrics.update(latency_summary(latencies))
+    return requests, metrics
 
 
 def main(argv=None):
@@ -117,7 +131,9 @@ def main(argv=None):
                         long_mode=args.long_mode)
     for r in reqs:
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
-    print(f"[serve] {stats['tokens_per_s']:.1f} tok/s over {stats['steps']} steps")
+    print(f"[serve] {stats['tokens_per_s']:.1f} tok/s over {stats['steps']} "
+          f"steps, latency p50 {stats['latency_p50_s'] * 1e3:.0f}ms "
+          f"p99 {stats['latency_p99_s'] * 1e3:.0f}ms")
     return stats
 
 

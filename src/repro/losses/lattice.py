@@ -119,7 +119,8 @@ def _frontiers_single(level_arcs, preds, succs, is_start, is_final,
     return arc_pos, pidx, sidx, ok, start, final
 
 
-def lattice_frontiers(lat: "Lattice") -> Frontiers:
+def lattice_frontiers(lat: "Lattice", *, max_levels: int | None = None,
+                      max_width: int | None = None) -> Frontiers:
     """Build the levelized frontier tensors of a batched lattice in the
     Pallas kernels' level-major layout.
 
@@ -128,13 +129,36 @@ def lattice_frontiers(lat: "Lattice") -> Frontiers:
     (``batch_lattices`` builds it); masked arcs never appear in
     ``level_arcs`` (``levelize_arcs`` excludes them), so ``arc_pos`` maps
     them — like -1 pads — to the dump slot.
+
+    ``max_levels``/``max_width`` pad ``level_arcs`` with -1 up to a fixed
+    (L, W) before the frontier tensors are built.  Bucket packing
+    (``repro.serving.packing``) uses this to pin every dispatch of a
+    bucket to ONE frontier shape — and hence one jitted executable —
+    regardless of the request mix; padded slots map to the dump slot
+    exactly like masked arcs, so results are bit-identical to the
+    unpadded path.
     """
     if lat.level_arcs is None:
         raise ValueError(
-            "lattice_frontiers needs Lattice.level_arcs; build batches "
-            "with repro.losses.lattice.batch_lattices")
+            "lattice_frontiers needs Lattice.level_arcs, which this "
+            "Lattice was built without.  Build batched lattices with "
+            "repro.losses.lattice.batch_lattices (it levelizes each "
+            "lattice via repro.losses.lattice.levelize_arcs), or attach "
+            "levelize_arcs output per lattice before batching.")
+    level_arcs = lat.level_arcs
+    L, W = level_arcs.shape[-2:]
+    tgt_l = L if max_levels is None else max_levels
+    tgt_w = W if max_width is None else max_width
+    if tgt_l < L or tgt_w < W:
+        raise ValueError(
+            f"lattice_frontiers: cannot shrink level_arcs {(L, W)} to "
+            f"(max_levels={tgt_l}, max_width={tgt_w}); padding only")
+    if (tgt_l, tgt_w) != (L, W):
+        level_arcs = jnp.pad(level_arcs,
+                             ((0, 0), (0, tgt_l - L), (0, tgt_w - W)),
+                             constant_values=-1)
     arc_pos, pidx, sidx, ok, start, final = jax.vmap(_frontiers_single)(
-        lat.level_arcs, lat.preds, lat.succs, lat.is_start, lat.is_final,
+        level_arcs, lat.preds, lat.succs, lat.is_start, lat.is_final,
         lat.arc_mask)
     return Frontiers(arc_pos=arc_pos, pidx=pidx, sidx=sidx, ok=ok,
                      start=start, final=final)

@@ -1,0 +1,32 @@
+"""Latency/throughput summaries shared by the serving layers.
+
+Both the token server (``launch.serve``) and the lattice-rescoring
+service (``serving.service``) report per-request wall-clock latency the
+same way: p50/p99 over completed requests, computed here so the two
+loops cannot drift apart on percentile conventions.
+"""
+from __future__ import annotations
+
+
+def percentile(values, q: float) -> float:  # reprolint: host
+    """Linear-interpolation percentile (q in [0, 100]) of a sequence.
+    Returns ``nan`` for an empty sequence — a serving run that completed
+    nothing has no latency, and silently reporting 0.0 would read as an
+    impossibly good tail."""
+    vals = sorted(float(v) for v in values)
+    if not vals:
+        return float("nan")
+    if len(vals) == 1:
+        return vals[0]
+    pos = (len(vals) - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, len(vals) - 1)
+    return vals[lo] + (vals[hi] - vals[lo]) * (pos - lo)
+
+
+def latency_summary(latencies_s) -> dict:  # reprolint: host
+    """The metric keys every serving loop reports: p50/p99 seconds."""
+    return {
+        "latency_p50_s": percentile(latencies_s, 50.0),
+        "latency_p99_s": percentile(latencies_s, 99.0),
+    }

@@ -1,0 +1,208 @@
+"""Streaming lattice rescoring: alpha checkpoints + virtual-start resume.
+
+A streaming client re-sends a growing partial lattice as the decoder
+extends it (same arc ids, new arcs appended/unmasked).  Rescoring from
+scratch repeats the forward recursion over every completed level;
+instead the session checkpoints the alpha frontier (``alpha``,
+``c_alpha`` per arc) and resumes from the last completed level by
+rewriting each *completed* arc — in place, same arc id — as a zero-span
+virtual start arc:
+
+  * ``start_t = end_t = 0`` — a zero-span arc's acoustic score is
+    exactly 0.0 (the mean-centred-cumsum endpoint gather collapses:
+    ``hi - lo`` of the same element plus ``span * mu`` with span 0), so
+  * ``lm = alpha_checkpoint`` makes the arc's forward score carry the
+    checkpointed value bit-for-bit, and
+  * ``corr = c_alpha_checkpoint`` does the same for the correctness
+    accumulator (a start arc's ``c_alpha`` is its own ``corr``);
+  * ``preds = -1`` / ``is_start = True`` cut the recursion below it;
+  * completed arcs that neither feed a new arc nor sit on the current
+    final frontier are masked out entirely.
+
+Re-levelizing the rewritten DAG collapses every completed level into
+level 0 — the resumed forward recursion runs O(remaining levels) steps.
+
+Bit-exactness depends on ONE jitted executable serving the checkpoint,
+resume, and from-scratch runs: XLA fuses different frontier shapes
+differently (1-ulp drift), so the session pins every dispatch to a
+single bucket shape (``session_bucket``) and pads with
+``packing.pad_to_bucket``.  Jitting also forces the uniform general-DAG
+kernel path on the pallas backend regardless of topology
+(``lattice_is_sausage`` is False for traced lattices), so sausage and
+DAG requests stream identically.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.lattice_engine import lattice_stats
+from repro.lattice_engine.common import LossStats, finalize_loss_only
+from repro.losses.lattice import batch_lattices, levelize_arcs
+from repro.serving.packing import (BucketSpec, fits, lattice_dims,
+                                   pack_log_probs, pad_to_bucket)
+
+
+def session_bucket(d: dict, *, batch: int = 1) -> BucketSpec:
+    """Pin a streaming session's dispatch shape from the final lattice
+    envelope.  ``level_width`` is the arc count, not the lattice's own
+    level width: resume collapses every completed level into level 0,
+    whose width is bounded only by the number of surviving arcs."""
+    dims = lattice_dims(d)
+    return BucketSpec(
+        batch=batch,
+        num_arcs=dims.num_arcs,
+        num_frames=dims.num_frames,
+        num_levels=max(dims.num_levels, 1),
+        level_width=max(dims.num_arcs, dims.level_width, 1),
+        fan=dims.fan,
+    )
+
+
+def truncate_levels(d: dict, n_levels_done: int) -> dict:  # reprolint: host
+    """The partial lattice a streaming client would send after the first
+    ``n_levels_done`` topological levels: later arcs masked out, the
+    current frontier (arcs with no surviving successor) marked final."""
+    la = d.get("level_arcs")
+    if la is None:
+        la = levelize_arcs(d["preds"], d["is_start"], d["arc_mask"])
+    keep = np.zeros_like(np.asarray(d["arc_mask"], bool))
+    for lv in range(min(n_levels_done, la.shape[0])):
+        ids = la[lv][la[lv] >= 0]
+        keep[ids] = True
+    out = dict(d)
+    out["arc_mask"] = np.asarray(d["arc_mask"], bool) & keep
+    is_final = np.zeros_like(np.asarray(d["is_final"], bool))
+    for a in np.where(out["arc_mask"])[0]:
+        succ = d["succs"][a]
+        succ = succ[succ >= 0]
+        if len(succ) == 0 or not out["arc_mask"][succ].any():
+            is_final[a] = True
+    out["is_final"] = is_final
+    out["level_arcs"] = levelize_arcs(out["preds"], out["is_start"],
+                                      out["arc_mask"])
+    return out
+
+
+def resume_lattice_dict(d: dict, done, alpha,  # reprolint: host
+                        c_alpha) -> dict:
+    """Rewrite the completed arcs of ``d`` as virtual start arcs carrying
+    the checkpointed (alpha, c_alpha) — see the module docstring.  Arc
+    ids/positions are preserved, so per-arc outputs line up with ``d``."""
+    mask = np.asarray(d["arc_mask"], bool)
+    done = np.asarray(done, bool) & mask
+    new = mask & ~done
+    out = {k: np.array(v, copy=True) for k, v in d.items()}
+    A = mask.shape[0]
+    needed = np.zeros(A, bool)
+    for a in np.where(new)[0]:
+        ps = d["preds"][a]
+        ps = ps[ps >= 0]
+        needed[ps[done[ps]]] = True
+    keep_virtual = done & (needed | np.asarray(d["is_final"], bool))
+    out["start_t"][done] = 0
+    out["end_t"][done] = 0
+    out["lm"][done] = alpha[done]
+    out["corr"][done] = c_alpha[done]
+    out["preds"][done] = -1
+    out["is_start"][done] = True
+    out["arc_mask"] = new | keep_virtual
+    out["level_arcs"] = levelize_arcs(out["preds"], out["is_start"],
+                                      out["arc_mask"])
+    return out
+
+
+class StreamSession:
+    """One request's streaming rescoring state.
+
+    ``rescore(d, log_probs)`` accepts successive snapshots of a growing
+    lattice (arc ids stable, arcs only ever added) and returns the
+    current ``LossStats`` — bit-identical to ``rescore_from_scratch`` on
+    the same snapshot, at O(levels since last call) forward cost.
+    """
+
+    def __init__(self, spec: BucketSpec, *, kappa: float,
+                 backend: str = "auto", resume_levels: int | None = None):
+        """``resume_levels`` opts into the *fast* resume path: when the
+        client checkpoints at least every ``resume_levels`` topological
+        levels, resume lattices (whose depth collapses to 1 + levels
+        grown) dispatch at a shallow ``resume_levels + 1``-level bucket
+        instead of the full one — compute proportional to the growth,
+        not the whole lattice.  The shallow bucket is a second
+        executable, so fast-path results agree with from-scratch to
+        float tolerance (1-ulp XLA fusion effects) rather than bitwise;
+        leave it ``None`` for the bit-pinned single-bucket mode.  A
+        growth spurt deeper than ``resume_levels`` silently falls back
+        to the full (bit-exact) bucket."""
+        import jax  # deferred so host-only tooling can import the module
+
+        self.spec = spec._replace(batch=1)
+        self.kappa = kappa
+        self.backend = backend
+        self.resume_levels = resume_levels
+        self.traces = 0
+        self._done = None          # (A,) bool: arcs already folded in
+        self._alpha = None         # (A,) f32 checkpoint
+        self._c_alpha = None
+
+        def _run(lat, lp):
+            self.traces += 1       # python side-effect: counts retraces
+            st = lattice_stats(lat, lp, self.kappa, backend=self.backend,
+                               accumulators="full")
+            fin = finalize_loss_only(lat, st.alpha, st.c_alpha)
+            return st.alpha, st.c_alpha, fin
+
+        self._fn = jax.jit(_run)
+
+    def _dispatch(self, d: dict, log_probs,  # reprolint: host
+                  spec: BucketSpec | None = None) -> tuple:
+        spec = spec or self.spec
+        lat = batch_lattices([pad_to_bucket(d, spec)])
+        lp = pack_log_probs([np.asarray(log_probs)], spec)
+        alpha, c_alpha, fin = self._fn(lat, lp)
+        return (np.array(alpha[0]), np.array(c_alpha[0]),
+                LossStats(logZ=np.asarray(fin.logZ)[0],
+                          c_avg=np.asarray(fin.c_avg)[0]))
+
+    def rescore(self, d: dict, log_probs) -> LossStats:  # reprolint: host
+        """Rescore the current snapshot, resuming from the checkpoint."""
+        padded = pad_to_bucket(d, self.spec)
+        mask = np.asarray(padded["arc_mask"], bool)
+        if self._done is None:
+            alpha, c_alpha, fin = self._dispatch(padded, log_probs)
+            self._alpha, self._c_alpha = alpha, c_alpha
+        else:
+            lost = self._done & ~mask
+            if lost.any():
+                raise ValueError(
+                    f"streaming lattice shrank: {int(lost.sum())} "
+                    f"previously-completed arcs are now masked (arc ids "
+                    f"must be stable and arcs only ever added)")
+            rd = resume_lattice_dict(padded, self._done, self._alpha,
+                                     self._c_alpha)
+            spec = None
+            if self.resume_levels is not None:
+                shallow = self.spec._replace(
+                    num_levels=min(self.resume_levels + 1,
+                                   self.spec.num_levels))
+                if fits(lattice_dims(rd), shallow):
+                    spec = shallow
+            alpha, c_alpha, fin = self._dispatch(rd, log_probs, spec)
+            new = mask & ~self._done
+            self._alpha[new] = alpha[new]
+            self._c_alpha[new] = c_alpha[new]
+        self._done = mask
+        return fin
+
+    def rescore_from_scratch(self, d: dict, log_probs) -> LossStats:
+        """Full recomputation through the SAME jitted executable — the
+        bit-exactness reference; does not touch the checkpoint."""
+        _, _, fin = self._dispatch(pad_to_bucket(d, self.spec), log_probs)
+        return fin
+
+    @property
+    def checkpoint(self) -> tuple:
+        """(done_mask, alpha, c_alpha) — copies of the stored frontier."""
+        if self._done is None:
+            return None
+        return (self._done.copy(), self._alpha.copy(),
+                self._c_alpha.copy())

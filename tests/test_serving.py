@@ -1,0 +1,235 @@
+"""Serving subsystem: bucket packing, service loop, frontier padding.
+
+The load-bearing property throughout is *batch-composition
+independence*: a request dispatched at a bucket shape gets bit-identical
+results no matter which other requests (or idle slots) share the
+launch — vmap lanes never exchange data and one executable per bucket
+means one fusion layout.  Everything else (admission, deadlines,
+retrace guards, fill metrics) is conventional serving bookkeeping.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.lattice_engine import lattice_stats
+from repro.losses.lattice import (Lattice, batch_lattices,
+                                  lattice_frontiers,
+                                  make_random_dag_lattice,
+                                  make_sausage_lattice)
+from repro.serving import packing
+from repro.serving.service import (RescoreRequest, RescoringService,
+                                   synthetic_workload)
+
+KAPPA = 0.5
+K = 6
+
+
+def _mixed_dicts(seed=0, n=5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        if i % 2 == 0:
+            out.append(make_sausage_lattice(rng, num_frames=8,
+                                            num_states=K, seg_len=4,
+                                            n_alt=2 + i % 2))
+        else:
+            out.append(make_random_dag_lattice(rng, num_frames=12,
+                                               num_states=K))
+    return out
+
+
+def _lps(dicts, seed=1):
+    rng = np.random.default_rng(seed)
+    lps = []
+    for d in dicts:
+        t = d["ref_states"].shape[0]
+        lp = rng.normal(0, 1, (t, K)).astype(np.float32)
+        lps.append(lp - np.log(np.exp(lp).sum(-1, keepdims=True)))
+    return lps
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+def test_choose_bucket_smallest_fit_and_clear_error():
+    dims = packing.LatticeDims(num_arcs=10, num_frames=8, num_levels=4,
+                               level_width=4, fan=3)
+    small = packing.BucketSpec(4, 16, 8, 4, 4, 4)
+    big = packing.BucketSpec(4, 64, 32, 16, 16, 8)
+    assert packing.choose_bucket(dims, [big, small]) == small
+    huge = dims._replace(num_arcs=1000)
+    with pytest.raises(ValueError, match="no bucket fits"):
+        packing.choose_bucket(huge, [small, big])
+
+
+def test_derive_buckets_cover_workload():
+    dicts = _mixed_dicts(n=7)
+    buckets = packing.derive_buckets(dicts, batch=4, tiers=2)
+    assert 1 <= len(buckets) <= 2
+    for d in dicts:
+        packing.choose_bucket(packing.lattice_dims(d), buckets)  # no raise
+
+
+def test_pack_requests_shapes_and_padding():
+    dicts = _mixed_dicts(n=3)
+    spec = packing.derive_buckets(dicts, batch=4, tiers=1)[0]
+    lat, n_live = packing.pack_requests(dicts, spec)
+    assert n_live == 3
+    assert lat.num_arcs == spec.num_arcs
+    assert lat.num_frames == spec.num_frames
+    assert lat.level_arcs.shape == (4, spec.num_levels, spec.level_width)
+    assert lat.preds.shape == (4, spec.num_arcs, spec.fan)
+    # the idle slot is fully masked
+    assert not np.asarray(lat.arc_mask)[3].any()
+
+
+def test_pack_oversize_rejected():
+    dicts = _mixed_dicts(n=2)
+    spec = packing.BucketSpec(batch=2, num_arcs=1, num_frames=4,
+                              num_levels=1, level_width=1, fan=1)
+    with pytest.raises(ValueError, match="exceed bucket"):
+        packing.pack_requests(dicts, spec)
+
+
+@pytest.mark.parametrize("backend", ["scan", "levelized", "pallas"])
+def test_packed_results_independent_of_batch_mix(backend):
+    """Request i packed with others == request i packed alone, bitwise."""
+    dicts = _mixed_dicts(n=4)
+    lps = _lps(dicts)
+    spec = packing.derive_buckets(dicts, batch=4, tiers=1)[0]
+    svc = RescoringService([spec], kappa=KAPPA, backend=backend)
+    together = svc.rescore(dicts, lps)
+    for i, d in enumerate(dicts):
+        alone = svc.rescore([d], [lps[i]])[0]
+        assert together[i]["logZ"] == alone["logZ"]
+        assert together[i]["c_avg"] == alone["c_avg"]
+    # and one executable served every mix
+    assert list(svc.traces.values()) == [1]
+
+
+def test_packed_results_match_native_shape_dispatch():
+    """Bucket padding is numerically transparent: same stats as running
+    each lattice at its own native shapes (allclose — different shapes
+    compile to different fusions, so bit-equality is not expected)."""
+    dicts = _mixed_dicts(n=4)
+    lps = _lps(dicts)
+    spec = packing.derive_buckets(dicts, batch=4, tiers=1)[0]
+    svc = RescoringService([spec], kappa=KAPPA, backend="levelized")
+    packed = svc.rescore(dicts, lps)
+    for d, lp, got in zip(dicts, lps, packed):
+        st = lattice_stats(batch_lattices([d]), lp[None], KAPPA,
+                           backend="levelized", accumulators="loss_only")
+        np.testing.assert_allclose(got["logZ"], np.asarray(st.logZ)[0],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got["c_avg"], np.asarray(st.c_avg)[0],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lattice_frontiers padding (losses/lattice.py satellite)
+# ---------------------------------------------------------------------------
+
+def test_lattice_frontiers_pad_bit_identity():
+    """Frontiers built with max_levels/max_width == frontiers of a
+    lattice whose level_arcs was padded by hand, field by field; and the
+    engine's results on the padded lattice are bit-identical."""
+    rng = np.random.default_rng(0)
+    d = make_random_dag_lattice(rng, num_frames=12, num_states=K)
+    lat = batch_lattices([d])
+    L, W = lat.level_arcs.shape[-2:]
+    fr = lattice_frontiers(lat, max_levels=L + 3, max_width=W + 2)
+    la = np.pad(np.asarray(lat.level_arcs),
+                ((0, 0), (0, 3), (0, 2)), constant_values=-1)
+    lat_pad = lat._replace(level_arcs=np.asarray(la))
+    fr_ref = lattice_frontiers(lat_pad)
+    for a, b in zip(fr, fr_ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # engine results are unchanged by the padded levels (bitwise)
+    lp = rng.normal(0, 1, (1, 12, K)).astype(np.float32)
+    for backend in ("levelized", "pallas"):
+        st = lattice_stats(lat, lp, KAPPA, backend=backend)
+        st_pad = lattice_stats(lat_pad, lp, KAPPA, backend=backend)
+        assert np.asarray(st.logZ) == np.asarray(st_pad.logZ)
+        assert np.asarray(st.c_avg) == np.asarray(st_pad.c_avg)
+        np.testing.assert_array_equal(np.asarray(st.alpha),
+                                      np.asarray(st_pad.alpha))
+
+
+def test_lattice_frontiers_pad_rejects_shrink():
+    lat = batch_lattices([_mixed_dicts(n=1)[0]])
+    with pytest.raises(ValueError, match="cannot shrink"):
+        lattice_frontiers(lat, max_levels=1, max_width=1)
+
+
+def test_lattice_frontiers_missing_levels_names_builder():
+    d = _mixed_dicts(n=1)[0]
+    lat = batch_lattices([d])._replace(level_arcs=None)
+    with pytest.raises(ValueError, match="batch_lattices"):
+        lattice_frontiers(lat)
+    with pytest.raises(ValueError, match="levelize_arcs"):
+        lattice_frontiers(lat)
+
+
+# ---------------------------------------------------------------------------
+# service loop
+# ---------------------------------------------------------------------------
+
+def test_service_run_completes_and_reports():
+    reqs = synthetic_workload(0, 8, rate_hz=500.0, num_states=K)
+    buckets = packing.derive_buckets([r.lattice for r in reqs],
+                                     batch=4, tiers=2)
+    svc = RescoringService(buckets, kappa=KAPPA, backend="levelized")
+    reqs, m = svc.run(reqs)
+    assert m["completed"] == 8 and m["rejected"] == 0 and m["timeout"] == 0
+    assert m["requests_per_s"] > 0
+    assert 0 < m["latency_p50_s"] <= m["latency_p99_s"]
+    assert 0 < m["slot_fill"] <= 1 and 0 < m["arc_fill"] <= 1
+    for r in reqs:
+        assert r.status == "ok" and np.isfinite(r.result["logZ"])
+        assert r.latency_s >= 0
+    # retrace guard: request mixes never retraced any bucket
+    assert all(v == 1 for v in svc.traces.values())
+
+
+def test_service_admission_control_rejects_overflow():
+    reqs = synthetic_workload(0, 6, rate_hz=500.0, num_states=K)
+    for r in reqs:
+        r.arrival_s = 0.0                  # all arrive at once
+    buckets = packing.derive_buckets([r.lattice for r in reqs],
+                                     batch=2, tiers=1)
+    svc = RescoringService(buckets, kappa=KAPPA, backend="levelized",
+                           max_queue=2)
+    reqs, m = svc.run(reqs)
+    assert m["rejected"] == 4 and m["completed"] == 2
+    assert sum(r.status == "rejected" for r in reqs) == 4
+
+
+def test_service_deadline_times_out():
+    reqs = synthetic_workload(0, 4, rate_hz=500.0, num_states=K,
+                              deadline_s=-1e-3)    # expired on arrival
+    buckets = packing.derive_buckets([r.lattice for r in reqs],
+                                     batch=4, tiers=1)
+    svc = RescoringService(buckets, kappa=KAPPA, backend="levelized")
+    reqs, m = svc.run(reqs)
+    assert m["timeout"] == 4 and m["completed"] == 0
+    assert all(r.result is None for r in reqs)
+
+
+def test_service_requires_buckets():
+    with pytest.raises(ValueError, match="BucketSpec"):
+        RescoringService([])
+
+
+# ---------------------------------------------------------------------------
+# shared latency metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_conventions():
+    from repro.serving.metrics import latency_summary, percentile
+    assert percentile([3.0, 1.0, 2.0], 50.0) == 2.0
+    assert percentile([1.0, 2.0], 100.0) == 2.0
+    assert np.isnan(percentile([], 99.0))
+    s = latency_summary([0.1, 0.2, 0.3, 0.4])
+    assert s["latency_p50_s"] == pytest.approx(0.25)
+    assert s["latency_p99_s"] <= 0.4

@@ -1,0 +1,174 @@
+"""Streaming rescoring: checkpoint + virtual-start resume bit-exactness.
+
+The acceptance property: resuming a grown partial lattice from an
+alpha-frontier checkpoint equals from-scratch rescoring *bitwise*
+(logZ and c_avg), on every backend.  This holds because (a) a zero-span
+arc's acoustic score is exactly 0.0, so a virtual start arc carries the
+checkpointed alpha/c_alpha through the recursion untouched, and (b) the
+session pins one bucket shape — one jitted executable — for the
+checkpoint, resume, and reference runs (different frontier shapes
+compile to different XLA fusions and drift by 1 ulp).
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import corpus
+from repro.losses.lattice import (levelize_arcs, make_random_dag_lattice,
+                                  make_sausage_lattice)
+from repro.serving.streaming import (StreamSession, resume_lattice_dict,
+                                     session_bucket, truncate_levels)
+
+KAPPA = 0.5
+K = 6
+BACKENDS = ("scan", "levelized", "pallas")
+
+# single-request dict lattices: the production generators plus the
+# dict-level adversarial corpus shapes (the batched corpus cases —
+# padded_row, packed_bucket — are multi-request and covered by
+# tests/test_serving.py / test_adversarial_lattices.py)
+CASES = {
+    "sausage": lambda rng: make_sausage_lattice(
+        rng, num_frames=16, num_states=K, seg_len=4, n_alt=3),
+    "dag": lambda rng: make_random_dag_lattice(
+        rng, num_frames=16, num_states=K),
+    "single_level": lambda rng: corpus._single_level_dict(
+        rng, num_states=K),
+    "max_fanin": lambda rng: corpus._max_fanin_dict(rng, num_states=K),
+    "zero_arc": lambda rng: corpus._zero_arc_dict(rng, num_states=K),
+}
+
+
+def _case(name, seed=0):
+    rng = np.random.default_rng(seed)
+    d = CASES[name](rng)
+    t = d["ref_states"].shape[0]
+    lp = rng.normal(0, 1, (t, K)).astype(np.float32)
+    lp = lp - np.log(np.exp(lp).sum(-1, keepdims=True))
+    return d, lp
+
+
+def _assert_bits(a, b):
+    assert np.asarray(a.logZ) == np.asarray(b.logZ)
+    assert np.asarray(a.c_avg) == np.asarray(b.c_avg)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_resume_bit_equal_from_scratch(case, backend):
+    d, lp = _case(case)
+    sess = StreamSession(session_bucket(d), kappa=KAPPA, backend=backend)
+    cut = max(1, d["level_arcs"].shape[0] // 2)
+    partial = truncate_levels(d, cut)
+    got_partial = sess.rescore(partial, lp)          # checkpoint
+    _assert_bits(got_partial, sess.rescore_from_scratch(partial, lp))
+    got = sess.rescore(d, lp)                        # resume
+    _assert_bits(got, sess.rescore_from_scratch(d, lp))
+    # one bucket shape -> one trace across checkpoint/resume/reference
+    assert sess.traces == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_step_growth_stays_exact(backend):
+    d, lp = _case("dag", seed=3)
+    L = d["level_arcs"].shape[0]
+    sess = StreamSession(session_bucket(d), kappa=KAPPA, backend=backend)
+    cuts = sorted({max(1, L // 3), max(1, (2 * L) // 3), L})
+    for cut in cuts:
+        snap = truncate_levels(d, cut) if cut < L else d
+        got = sess.rescore(snap, lp)
+        _assert_bits(got, sess.rescore_from_scratch(snap, lp))
+    assert sess.traces == 1
+
+
+def test_checkpoint_matches_full_run_alpha():
+    d, lp = _case("dag", seed=1)
+    sess = StreamSession(session_bucket(d), kappa=KAPPA,
+                         backend="levelized")
+    cut = max(1, d["level_arcs"].shape[0] // 2)
+    sess.rescore(truncate_levels(d, cut), lp)
+    sess.rescore(d, lp)
+    done, alpha, _ = sess.checkpoint
+    # a fresh session's from-scratch first pass stores the same bits
+    ref = StreamSession(session_bucket(d), kappa=KAPPA,
+                        backend="levelized")
+    ref.rescore(d, lp)
+    _, ref_alpha, _ = ref.checkpoint
+    np.testing.assert_array_equal(alpha[done], ref_alpha[done])
+
+
+def test_resume_lattice_construction():
+    d, lp = _case("dag", seed=2)
+    cut = max(1, d["level_arcs"].shape[0] // 2)
+    partial = truncate_levels(d, cut)
+    done = np.asarray(partial["arc_mask"], bool)
+    alpha = np.arange(done.shape[0], dtype=np.float32)
+    c_alpha = alpha * 0.5
+    rd = resume_lattice_dict(d, done, alpha, c_alpha)
+    live_done = done & np.asarray(rd["arc_mask"], bool)
+    # virtual arcs: zero span, checkpoint scores, no predecessors
+    assert (rd["start_t"][live_done] == rd["end_t"][live_done]).all()
+    np.testing.assert_array_equal(rd["lm"][live_done], alpha[live_done])
+    np.testing.assert_array_equal(rd["corr"][live_done],
+                                  c_alpha[live_done])
+    assert (rd["preds"][live_done] == -1).all()
+    assert rd["is_start"][live_done].all()
+    # completed arcs that feed nothing new and are not final are dropped
+    new = np.asarray(d["arc_mask"], bool) & ~done
+    needed = np.zeros_like(done)
+    for a in np.where(new)[0]:
+        ps = d["preds"][a]
+        ps = ps[ps >= 0]
+        needed[ps[done[ps]]] = True
+    expect_live = needed | np.asarray(d["is_final"], bool) & done
+    np.testing.assert_array_equal(live_done, done & expect_live)
+    # the collapse is the compute win: fewer levels than from scratch
+    assert rd["level_arcs"].shape[0] <= d["level_arcs"].shape[0]
+    assert rd["level_arcs"].shape[0] == 1 + (
+        levelize_arcs(d["preds"], d["is_start"],
+                      d["arc_mask"]).shape[0] - cut)
+
+
+def _deep_sausage(seed=0):
+    rng = np.random.default_rng(seed)
+    d = make_sausage_lattice(rng, num_frames=32, num_states=K,
+                             seg_len=2, n_alt=2)          # 16 levels
+    lp = rng.normal(0, 1, (32, K)).astype(np.float32)
+    return d, lp - np.log(np.exp(lp).sum(-1, keepdims=True))
+
+
+def test_fast_resume_shallow_bucket_allclose():
+    """resume_levels opts into a second, shallow executable: resumes
+    agree with from-scratch to float tolerance (not bitwise — that is
+    the documented trade) and the growth collapses into few levels."""
+    d, lp = _deep_sausage()
+    L = d["level_arcs"].shape[0]
+    sess = StreamSession(session_bucket(d), kappa=KAPPA,
+                         backend="levelized", resume_levels=4)
+    sess.rescore(truncate_levels(d, L - 4), lp)          # full bucket
+    got = sess.rescore(d, lp)                            # shallow bucket
+    ref = sess.rescore_from_scratch(d, lp)
+    np.testing.assert_allclose(np.asarray(got.logZ),
+                               np.asarray(ref.logZ), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.c_avg),
+                               np.asarray(ref.c_avg), rtol=1e-6)
+    assert sess.traces == 2                              # full + shallow
+
+
+def test_fast_resume_falls_back_when_growth_exceeds():
+    d, lp = _deep_sausage()
+    L = d["level_arcs"].shape[0]
+    sess = StreamSession(session_bucket(d), kappa=KAPPA,
+                         backend="levelized", resume_levels=2)
+    sess.rescore(truncate_levels(d, L // 2), lp)
+    got = sess.rescore(d, lp)      # grew L/2 >> 2 levels: full bucket
+    _assert_bits(got, sess.rescore_from_scratch(d, lp))  # still bitwise
+    assert sess.traces == 1
+
+
+def test_session_rejects_shrinking_lattice():
+    d, lp = _case("sausage")
+    sess = StreamSession(session_bucket(d), kappa=KAPPA,
+                         backend="levelized")
+    sess.rescore(d, lp)
+    with pytest.raises(ValueError, match="shrank"):
+        sess.rescore(truncate_levels(d, 1), lp)

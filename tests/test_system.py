@@ -38,6 +38,17 @@ def test_serve_driver():
     stats = main(["--arch", "xlstm-125m", "--smoke", "--requests", "3",
                   "--max-new", "4", "--cache-len", "32"])
     assert stats["tokens_per_s"] > 0
+    # per-request completion latency rides along with throughput: p50/p99
+    # over wall-clock times, p99 bounded by the whole serve() wall time
+    assert 0 < stats["latency_p50_s"] <= stats["latency_p99_s"]
+    assert stats["latency_p99_s"] <= stats["wall_s"] + 1e-6
+
+
+def test_rescoring_service_smoke_cli():
+    from repro.serving.service import main
+    metrics = main(["--smoke", "--requests", "6"])
+    assert metrics["completed"] == 6
+    assert metrics["requests_per_s"] > 0
 
 
 def test_lm_data_deterministic():
