@@ -19,6 +19,12 @@ CG-stage cost lever engaged:
                              (``cg_iters_used`` in the JSON row) instead
                              of the old always-pay-the-ceiling regression.
   * ``nghf_fast``          — all levers together.
+  * ``nghf_fsdp4x2``       — the sharded second-order LM path: one NGHF
+                             update on the qwen smoke LM with 2d (FSDP)
+                             parameter storage over an 8-device host-CPU
+                             mesh (4 data x 2 model), timed in a
+                             subprocess (the forced device count must
+                             precede jax init).
 
 Emits the standard CSV rows plus one JSON row per optimiser:
 
@@ -174,6 +180,76 @@ def donation_row(cfg, params, counts, gb, cb):
     return rec
 
 
+def sharded_lm_row():
+    """The ``nghf_fsdp4x2`` row: one NGHF LM update with 2d (FSDP)
+    parameter storage on a 4 data x 2 model host-CPU mesh — what
+    ``--arch lm-* --optimizer nghf`` runs per step, θ-sized CG state
+    sharded included.  The child process times the settled (warm-started,
+    donating) step and prints the JSON row; the parent re-emits it."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import json, time
+        import jax
+        from repro.configs.base import get_config
+        from repro.core.optim import config_for
+        from repro.data.pipeline import shard_batch
+        from repro.data.synthetic import lm_batch
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import param_shardings
+        from repro.launch.steps import build_step, jit_train_step
+        from repro.models.registry import get_model
+
+        cfg = get_config("qwen2.5-3b").smoke().replace(param_sharding="2d")
+        model = get_model(cfg)
+        mesh = make_debug_mesh(4, 2)
+        pshard = param_shardings(cfg, mesh, model.param_shapes())
+        params = jax.tree.map(jax.device_put,
+                              model.init(jax.random.PRNGKey(0)), pshard)
+        ocfg = config_for("nghf", cg_iters=6, ng_iters=3,
+                          preconditioner="fisher_diag", warm_start=True)
+        fn, opt = build_step(cfg, ocfg, cg_frac=2, min_cg=4,
+                             state_sharding=pshard, mesh=mesh)
+        gb = shard_batch(lm_batch(0, batch=8, seq_len=32,
+                                  vocab=cfg.vocab_size), mesh)
+        step = jit_train_step(fn)
+        state = opt.init(params, state_sharding=pshard)
+        p = params                  # donated: always chain the outputs
+        for _ in range(2):          # compile + settle the warm start
+            p, state, m = step(p, state, gb)
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            p, state, m = step(p, state, gb)
+        jax.block_until_ready((p, state))
+        us = (time.perf_counter() - t0) / iters * 1e6
+        print(json.dumps({
+            "bench": "optim_update", "optimizer": "nghf_fsdp4x2",
+            "mesh": "4x2", "devices": int(jax.device_count()),
+            "param_sharding": "2d", "warm_start": True,
+            "B": 8, "cg_B": 4, "T": 32,
+            "ms_per_update": round(us / 1e3, 4),
+            "cg_iters_used": int(m["cg_iters_used"]),
+            "cg_best_loss": round(float(m["cg_best_loss"]), 6)}))
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"nghf_fsdp4x2 bench failed:\n{out.stderr[-3000:]}")
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    emit("optim_update.nghf_fsdp4x2", rec["ms_per_update"] * 1e3,
+         f"ms_per_update={rec['ms_per_update']:.3f}")
+    print(json.dumps(rec))
+    return rec
+
+
 def run(budget: str = "small", json_out: str | None = None):
     cfg = LSTM.smoke().replace(hidden_dim=48, num_outputs=30)
     params = acoustic.init_params(cfg, jax.random.PRNGKey(0))
@@ -217,6 +293,7 @@ def run(budget: str = "small", json_out: str | None = None):
         print(json.dumps(rec))
 
     json_rows.append(donation_row(cfg, params, counts, gb, cb))
+    json_rows.append(sharded_lm_row())
     json_rows += phase_breakdown(cfg, params, counts, cb)
 
     if json_out:

@@ -38,12 +38,14 @@ GOLDENS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "tests", "goldens")
 
 # targets whose collective census is pinned to a golden baseline
-GOLDEN_TARGETS = ("lstm-asr__mesh4x2", "tdnn-asr__mesh2x4")
+GOLDEN_TARGETS = ("lstm-asr__mesh4x2", "tdnn-asr__mesh2x4",
+                  "lm-qwen-smoke__fsdp4x2")
 
 # targets whose compiled cost (flops / bytes moved / peak memory) is
 # pinned to a resource golden (GA008) — one per audited graph family:
 # the paper's sequence step, the LM step, and the serve path
-RESOURCE_TARGETS = ("lstm-asr__nomesh", "lm-qwen-smoke", "serve-decode")
+RESOURCE_TARGETS = ("lstm-asr__nomesh", "lm-qwen-smoke", "serve-decode",
+                    "lm-qwen-smoke__fsdp4x2")
 
 
 def _debug_mesh(data: int, model: int):
@@ -121,6 +123,42 @@ def _lm_setup():
         n_state_leaves=len(jax.tree.leaves(opt_state)))
 
 
+def _lm_fsdp_setup():
+    """Sharded second-order LM path: NGHF (fisher_diag + warm start) on
+    the qwen smoke geometry with 2d (FSDP) parameter storage over a
+    4 data x 2 model mesh — the exact ``--arch lm-* --optimizer nghf``
+    trainer graph.  Its collective census is a golden (GA004): the FSDP
+    gathers of the CG stage's GN/Fisher products are the paper's Fig. 1
+    worker exchanges, and an accidental re-gather per CG iteration shows
+    up here as an all-gather count jump."""
+    from repro.configs.base import get_config
+    from repro.core.optim import config_for
+    from repro.data.pipeline import shard_batch
+    from repro.data.synthetic import lm_batch
+    from repro.launch.sharding import param_shardings
+    from repro.launch.steps import build_step, jit_train_step
+    from repro.models.registry import get_model
+
+    cfg = get_config("qwen2.5-3b").smoke().replace(param_sharding="2d")
+    mesh = _debug_mesh(4, 2)
+    model = get_model(cfg)
+    pshard = param_shardings(cfg, mesh, model.param_shapes())
+    params = jax.tree.map(jax.device_put, model.init(jax.random.PRNGKey(0)),
+                          pshard)
+    ocfg = config_for("nghf", cg_iters=2, ng_iters=1,
+                      preconditioner="fisher_diag", warm_start=True)
+    fn, opt = build_step(cfg, ocfg, cg_frac=2, min_cg=4,
+                         state_sharding=pshard, mesh=mesh)
+    opt_state = opt.init(params, state_sharding=pshard)
+    gb = shard_batch(lm_batch(0, batch=8, seq_len=16, vocab=cfg.vocab_size),
+                     mesh)
+    step = jit_train_step(fn)
+    return step, (params, opt_state, gb), dict(
+        mesh=mesh, make_batch=None,
+        n_param_leaves=len(jax.tree.leaves(params)),
+        n_state_leaves=len(jax.tree.leaves(opt_state)))
+
+
 def _serve_setup():
     """Single-token decode step (no donation by design)."""
     from repro.configs.base import get_config
@@ -149,6 +187,7 @@ TARGETS: Dict[str, Tuple[Callable, bool, bool]] = {
     "tdnn-asr__mesh2x4": (lambda: _sequence_setup("tdnn-asr", (2, 4)),
                           True, False),
     "lm-qwen-smoke": (_lm_setup, True, False),
+    "lm-qwen-smoke__fsdp4x2": (_lm_fsdp_setup, True, False),
     "serve-decode": (_serve_setup, False, False),
 }
 

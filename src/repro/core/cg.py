@@ -40,9 +40,14 @@ And two cost levers on the vector/iteration side:
     TPU (3 HBM reads + 2 writes instead of 5 + 2, the dot rides along
     with an exact per-block f32 reduction), the pure-jnp fused reference
     elsewhere.  With the identity preconditioner the kernel's ``rr`` IS
-    ``<r, z>``, so the separate reduction pass disappears too.  This is
-    the single-chip fast path: it is mutually exclusive with
-    ``constrain`` (sharded runs keep the pytree layout).
+    ``<r, z>``, so the separate reduction pass disappears too.  Under a
+    mesh (``constrain`` given) the solve switches to the SHARDED fused
+    variant: the loop carries keep the pytree layout (a ravel of a
+    2d-sharded leaf is inexpressible for GSPMD), each leaf is the
+    per-shard flat buffer for one fused elementwise pass, and ``rr`` is
+    the exact cross-shard reduction — per-leaf f32 partials + one
+    all-reduce (``kernels.ops.cg_fused_update_tree``) — composing with
+    the per-leaf sharding constraints instead of refusing them.
   * **Adaptive iteration budget** (``tol > 0``) — instead of always
     spending ``iters`` curvature products, stop once CG's per-iteration
     relative improvement of the quadratic model q(x) = ½xᵀBx − xᵀb
@@ -115,20 +120,20 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
               historical fixed-``iters`` scan bit-for-bit.
     min_iters: floor before ``tol`` may fire (the first gain is measured
               against q(x0)).
-    fused:    run the per-iteration vector work on ONE flat buffer via
+    fused:    run the per-iteration vector work fused.  Single-chip
+              (``constrain=None``): ONE flat buffer via
               ``kernels.ops.cg_fused_update`` (Pallas on TPU, fused-jnp
-              ref elsewhere).  Single-chip path: incompatible with
-              ``constrain``.
+              ref elsewhere).  Under a mesh (``constrain`` given): the
+              sharded variant ``cg_fused_update_tree`` — per-leaf fused
+              passes + exact cross-shard ``rr`` reduction, leaving every
+              carry in its (constrained) pytree layout.
     """
-    if fused and constrain is not None:
-        raise ValueError("fused CG is the single-chip fast path: flat "
-                         "buffers cannot carry a pytree sharding "
-                         "constraint (disable fused under a mesh)")
+    sharded_fused = fused and constrain is not None
     if constrain is None:
         constrain = lambda t: t          # noqa: E731
 
     unravel = None
-    if fused:
+    if fused and not sharded_fused:
         # flatten ONCE; every loop-carried vector lives in one contiguous
         # buffer so the AXPY+dot chain is a single kernel launch.  The
         # matrix-free product still needs the pytree view — unravel is a
@@ -185,7 +190,12 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
         bad = (vbv <= 0.0) | dead
         alpha = jnp.where(bad, 0.0, rz / jnp.maximum(vbv, 1e-30))
         if fused:
-            x_new, r_new, rr = kernel_ops.cg_fused_update(alpha, x, v, r, bv)
+            if sharded_fused:
+                x_new, r_new, rr = kernel_ops.cg_fused_update_tree(
+                    alpha, x, v, r, bv)
+            else:
+                x_new, r_new, rr = kernel_ops.cg_fused_update(
+                    alpha, x, v, r, bv)
             if identity_precond:
                 # with M = I the kernel's exact blockwise <r, r> IS <r, z>
                 z_new, rz_new = r_new, rr
@@ -325,7 +335,7 @@ def cg_solve(bv_fn: Callable, b, *, iters: int,
         none_found = ~jnp.isfinite(best_loss)
         best_x = tm.where(none_found, last, best_x)
         best_iter = jnp.where(none_found, last_iter, best_iter)
-    if fused:
+    if unravel is not None:
         best_x = unravel(best_x)
     return CGResult(x=best_x, best_loss=best_loss, best_iter=best_iter,
                     quad=quad, resid=resid, curv=curv, losses=losses,

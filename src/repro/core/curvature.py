@@ -46,7 +46,7 @@ class CurvatureOps(NamedTuple):
     logits: jnp.ndarray   # primal logits on the curvature batch
 
 
-def subsample_batch(batch, fraction: float):
+def subsample_batch(batch, fraction: float, multiple: int = 1):
     """Deterministic leading-dim prefix of a batch pytree.
 
     Keeps ``max(1, round(B * fraction))`` utterances of every
@@ -55,11 +55,21 @@ def subsample_batch(batch, fraction: float):
     batch is itself drawn randomly from the whole training set
     (Sec. 4.1), so a static prefix is an unbiased sample — and being a
     static slice it stays jit-friendly (no gather, no recompile per
-    step)."""
+    step).
+
+    ``multiple`` (the data-parallel mesh extent under GSPMD) rounds the
+    kept size UP to a whole multiple so the sample splits evenly across
+    the data axes — He et al.'s distributed-HF worker split: each worker
+    keeps the same per-shard prefix of its local shard and the products'
+    batch mean stays one all-reduce.  A non-divisible prefix would
+    instead fall off the sharded layout and replicate the curvature
+    batch on every device."""
     arrs = [x for x in jax.tree.leaves(batch)
             if hasattr(x, "ndim") and x.ndim >= 1]
     B = arrs[0].shape[0]
     n = max(1, int(round(B * float(fraction))))
+    if multiple > 1 and B % multiple == 0:
+        n = min(B, ((n + multiple - 1) // multiple) * multiple)
     if n >= B:
         return batch
 
@@ -76,7 +86,8 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
                        theta_norm=None,
                        mode: str = "rematvp",
                        eval_accumulators: str = "full",
-                       curvature_sample: float = 1.0) -> CurvatureOps:
+                       curvature_sample: float = 1.0,
+                       data_extent: int = 1) -> CurvatureOps:
     """forward_fn(params, batch) -> (logits, aux).
 
     eval_accumulators: statistics mode for ``eval_loss`` (the per-CG-
@@ -97,6 +108,17 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
     across outer iterations by rebuilding the step (shapes are static
     under jit) — ``launch.train --curvature-sample-schedule``.
 
+    data_extent: size of the data-parallel mesh axes the CG batch is
+    sharded over (1 = unsharded, bit-identical to before).  The
+    curvature sample is rounded up to a multiple of it
+    (``subsample_batch(..., multiple=data_extent)``) so the GN/Fisher
+    products run as He-style worker splits — every worker computes its
+    shard's partial JVP/VJP and the batch-mean inside the LossSpec
+    factor is reduced ONCE per product by the GSPMD all-reduce; the
+    model's own FSDP gathers (``launch.fsdp.gather_for_compute``, traced
+    inside ``forward_fn``) apply to the jvp/vjp passes exactly as to the
+    primal forward.
+
     mode="linearize": linearize ONCE and reuse residuals across CG
     iterations — fastest, but holds every forward intermediate of the CG
     batch in memory for the whole CG stage (fine for the paper-scale
@@ -108,7 +130,8 @@ def make_curvature_ops(forward_fn, loss_spec, params, batch, *,
     ~1.7x compute per CG iteration, O(30x) less resident memory.
     """
     curv_batch = (batch if curvature_sample >= 1.0
-                  else subsample_batch(batch, curvature_sample))
+                  else subsample_batch(batch, curvature_sample,
+                                       multiple=data_extent))
 
     def f(p):
         return forward_fn(p, curv_batch)[0]

@@ -53,7 +53,13 @@ class Preconditioner:
 
         return self.state_template(theta, lambda dt, v0: jnp.asarray(v0, dt))
 
-    def update(self, pstate, grads):
+    def update(self, pstate, grads, constrain=None):
+        """Gradient-stage accumulation.  ``constrain`` (θ-tree -> θ-tree,
+        the optimiser's storage-sharding constrainer) MUST be applied to
+        any θ-sized state the update produces: without it a 2d-FSDP run
+        leaves the fresh EMA leaves on whatever sharding the gradient
+        cotangents carried — or, at the jit boundary, fully replicated —
+        silently costing a θ-sized f32 copy per device at mixtral scale."""
         return pstate
 
     def apply_fn(self, pstate) -> Optional[Callable]:
@@ -86,7 +92,17 @@ class ShareCountsPreconditioner(Preconditioner):
 
 class FisherDiagPreconditioner(Preconditioner):
     """Running empirical-Fisher diagonal, accumulated in the gradient
-    stage:  d ← β d + (1-β) g²  per leaf,  M⁻¹ r = r / (d̂ + ε)^α."""
+    stage:  d ← β d + (1-β) g²  per leaf,  M⁻¹ r = r / (d̂ + ε)^α.
+
+    Tied-embedding leaves need no special casing HERE: with
+    ``cfg.tie_embeddings`` the embed/head weight is ONE leaf of the
+    parameter tree, so its gradient already sums both applications'
+    cotangents and the EMA diagonal correctly reflects the doubled
+    per-token usage (the static 2x count lives in
+    ``Model.share_counts`` for the share_counts preconditioner).  The
+    diagonal IS θ-sized f32 state, though — ``update`` must land it on
+    the optimiser's storage sharding (``constrain``), mirroring
+    ``state_shardings``."""
 
     name = "fisher_diag"
     has_state = True
@@ -101,11 +117,15 @@ class FisherDiagPreconditioner(Preconditioner):
         return {"d": theta(cast=lambda p: jnp.float32),
                 "n": scalar(jnp.int32, 0)}
 
-    def update(self, pstate, grads):
+    def update(self, pstate, grads, constrain=None):
         b = self.decay
         d = jax.tree.map(
             lambda dd, g: b * dd + (1.0 - b) *
             jnp.square(g.astype(jnp.float32)), pstate["d"], grads)
+        if constrain is not None:
+            # θ-sized EMA state follows state_shardings (2d storage), not
+            # the gradient cotangents' compute sharding
+            d = constrain(d)
         return {"d": d, "n": pstate["n"] + 1}
 
     def apply_fn(self, pstate):

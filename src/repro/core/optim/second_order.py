@@ -41,6 +41,7 @@ tests run through them unchanged.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from dataclasses import dataclass
 
 import jax
@@ -51,6 +52,29 @@ from repro.core.cg import cg_solve
 from repro.core.curvature import grad_and_loss, make_curvature_ops
 from repro.core.optim.base import Optimizer, register_optimizer
 from repro.core.optim.preconditioners import get_preconditioner
+
+logger = logging.getLogger(__name__)
+
+
+def _mesh_data_extent(state_sharding) -> int:
+    """Data-parallel extent of the storage mesh (1 when unsharded).
+
+    Read off the first NamedSharding leaf; the ("pod", "data") axis
+    convention is the same single definition ``launch.sharding.
+    data_extent`` uses (kept inline here so core/ stays launch-free)."""
+    if state_sharding is None:
+        return 1
+    for s in jax.tree.leaves(
+            state_sharding,
+            is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)):
+        mesh = getattr(s, "mesh", None)
+        if mesh is not None:
+            size = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    size *= int(mesh.shape[a])
+            return size
+    return 1
 
 
 @dataclass(frozen=True)
@@ -67,12 +91,14 @@ class SecondOrderConfig:
                                   # budget bit-for-bit.  Applies to the
                                   # outer solve AND the inner NG solve.
     cg_min_iters: int = 1         # floor before cg_tol may fire
-    cg_fused: bool = False        # fused flat-buffer CG vector work
-                                  # (kernels/cg_fused.py: one launch for
-                                  # x+=αv, r-=αBv, <r,r>); single-chip
-                                  # lever — auto-disabled under a mesh
-                                  # (state_sharding), where the pytree
-                                  # constraints must stay per-leaf
+    cg_fused: bool = False        # fused CG vector work (one pass for
+                                  # x+=αv, r-=αBv, <r,r>): the flat-
+                                  # buffer kernel (kernels/cg_fused.py)
+                                  # on a single chip, the sharded per-
+                                  # leaf variant (cg_fused_update_tree)
+                                  # under a mesh (state_sharding), where
+                                  # carries keep their per-leaf 2d
+                                  # sharding and rr reduces cross-shard
     curvature_sample: float = 1.0  # fraction of the CG batch used for the
                                   # GN/Fisher products (Sainath-style
                                   # sampling); candidate evaluation always
@@ -150,6 +176,15 @@ class SecondOrderOptimizer(Optimizer):
         self.forward_fn = forward_fn
         self.loss_spec = loss_spec
         self.state_sharding = state_sharding
+        # He-style worker split of the curvature batch: GN/Fisher products
+        # keep the CG batch evenly divisible over the data axes so every
+        # product is per-shard work + ONE all-reduce
+        self.data_extent = _mesh_data_extent(state_sharding)
+        if cfg.cg_fused and state_sharding is not None:
+            logger.info(
+                "%s: cg_fused under a mesh — using the sharded per-leaf "
+                "fused path (cg_fused_update_tree); the flat-buffer Pallas "
+                "kernel needs an unsharded ravel", cfg.method)
         pname = cfg.preconditioner if cfg.precondition else "identity"
         self.precond = get_preconditioner(
             pname, share_counts=share_counts, fisher_decay=cfg.fisher_decay,
@@ -194,7 +229,10 @@ class SecondOrderOptimizer(Optimizer):
             self.forward_fn, self.loss_spec, params, grad_batch,
             microbatches=cfg.grad_microbatches, constrain=_c)
         grads = _c(grads)
-        pstate = self.precond.update(state["precond"], grads)
+        # θ-sized preconditioner state (fisher_diag's EMA) must mirror
+        # state_shardings: the constrainer pins it to the 2d storage
+        # sharding instead of letting it replicate at the jit boundary
+        pstate = self.precond.update(state["precond"], grads, constrain=_c)
         b = tm.scale(grads, -1.0)
         if cfg.state_dtype != "float32":
             b = jax.tree.map(lambda x: x.astype(cfg.state_dtype), b)
@@ -206,14 +244,16 @@ class SecondOrderOptimizer(Optimizer):
                                  theta_norm=theta_norm,
                                  mode=cfg.curvature_mode,
                                  eval_accumulators=cfg.eval_accumulators,
-                                 curvature_sample=cfg.curvature_sample)
+                                 curvature_sample=cfg.curvature_sample,
+                                 data_extent=self.data_extent)
         precond = self.precond.apply_fn(pstate)
         lam = state["lam"] if cfg.adapt_lam else cfg.lam
-        # fused CG is the single-chip fast path: under a mesh the CG
-        # carries must remain pytrees so the per-leaf sharding
-        # constraints apply (flat buffers would force an all-gather)
+        # fused vector work survives the mesh: with ``constrain`` set,
+        # cg_solve dispatches the sharded per-leaf fused path (carries
+        # stay pytrees, rr is an exact cross-shard reduction) instead of
+        # the single-chip flat-buffer kernel
         solve_kw = dict(tol=cfg.cg_tol, min_iters=cfg.cg_min_iters,
-                        fused=cfg.cg_fused and ss is None)
+                        fused=cfg.cg_fused)
 
         def _st(t):
             """Match the CG state storage dtype (bf16 state keeps scan

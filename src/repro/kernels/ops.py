@@ -109,3 +109,18 @@ def cg_fused_update(alpha, x, v, r, bv, *, use_pallas: bool | None = None):
     if not use_pallas:
         return ref.cg_fused_update_ref(alpha, x, v, r, bv)
     return _cg_pallas(alpha, x, v, r, bv, interpret=None)
+
+
+def cg_fused_update_tree(alpha, x, v, r, bv):
+    """Sharded fused CG vector update over θ-sized PYTREES.
+
+    The mesh-safe counterpart of ``cg_fused_update``: ravelling a
+    2d-sharded pytree into one flat buffer is inexpressible for GSPMD
+    (full all-gather per leaf), so each leaf stays in its natural layout
+    — which IS the per-shard flat buffer under GSPMD — and ``rr`` is an
+    exact cross-shard reduction (per-leaf f32 partial sums + one
+    all-reduce).  Always the jnp reference: the fused elementwise chain
+    is one XLA fusion per leaf, and per-leaf Pallas launches would defeat
+    the partitioner.  ``core.cg.cg_solve(fused=True, constrain=...)``
+    dispatches here."""
+    return ref.cg_fused_update_tree_ref(alpha, x, v, r, bv)

@@ -275,3 +275,35 @@ def cg_fused_update_ref(alpha, x, v, r, bv):
     r_new = (rf - alpha * bvf).astype(r.dtype)
     rr = jnp.sum((rf - alpha * bvf) ** 2)
     return x_new, r_new, rr
+
+
+def cg_fused_update_tree_ref(alpha, x, v, r, bv):
+    """Sharded variant of the fused CG vector update: per-leaf buffers
+    instead of one ravelled buffer.
+
+    Flattening a 2d-sharded pytree is inexpressible for GSPMD (a ravel
+    forces a full all-gather — the same reason ``tree_math.vdot`` avoids
+    ``jnp.vdot``), so under a mesh each leaf keeps its natural shape and
+    acts as the per-shard flat buffer: the x+αv / r−αBv / r² chain is one
+    fused elementwise pass over every leaf, and ``rr`` is the EXACT
+    cross-shard reduction — per-leaf f32 partial sums (per-shard partials
+    + one all-reduce under GSPMD) summed over the tree.  Dtype discipline
+    matches ``cg_fused_update_ref``: updates compute in f32, land in the
+    leaf's storage dtype, ``rr`` stays f32."""
+
+    def leaf(xi, vi, ri, bvi):
+        xf = xi.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        rf = ri.astype(jnp.float32)
+        bvf = bvi.astype(jnp.float32)
+        rn = rf - alpha * bvf
+        return ((xf + alpha * vf).astype(xi.dtype),
+                rn.astype(ri.dtype), jnp.sum(rn * rn))
+
+    out = jax.tree.map(leaf, x, v, r, bv,
+                       is_leaf=lambda t: hasattr(t, "dtype"))
+    x_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda t: type(t) is tuple)
+    r_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda t: type(t) is tuple)
+    rr = jax.tree.reduce(lambda a, o: a + o[2], out, jnp.float32(0.0),
+                         is_leaf=lambda t: type(t) is tuple)
+    return x_new, r_new, rr

@@ -99,17 +99,12 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def _fsdp_ctx(cfg: ArchConfig, mesh):
     """Register FSDP gathering (2d params) + sequence-parallel activation
-    sharding for distributed lowering."""
-    import contextlib
-
+    sharding for distributed lowering.  Thin alias of the shared
+    ``fsdp.step_context`` (``build_step(mesh=...)`` also enters it inside
+    the step body, so entering it here again is an idempotent no-op-safe
+    nesting — contextvars stack)."""
     from repro.launch import fsdp
-    stack = contextlib.ExitStack()
-    if cfg.param_sharding == "2d":
-        stack.enter_context(fsdp.compute_specs(fsdp.make_spec_fn(cfg, mesh)))
-    if cfg.param_sharding != "replicated":
-        stack.enter_context(
-            fsdp.activation_sharding(fsdp.make_activation_sharding(mesh)))
-    return stack
+    return fsdp.step_context(cfg, mesh)
 
 
 def _step_and_args(cfg: ArchConfig, shape_name: str, mesh):
@@ -134,7 +129,7 @@ def _step_and_args(cfg: ArchConfig, shape_name: str, mesh):
                                   grad_microbatches=mb)
         fn, opt = build_step(cfg, socfg, cg_frac=16,
                              min_cg=mesh.devices.size // mesh.shape["model"],
-                             state_sharding=pshard)
+                             state_sharding=pshard, mesh=mesh)
         # optimiser state specs: abstract init (no arrays are materialised)
         # + the protocol's sharding mirror of the param shardings
         sshapes = jax.eval_shape(opt.init, pshapes)

@@ -149,6 +149,26 @@ def constrain_vocab_matrix(x):
         x, NamedSharding(mesh, P(None, "model")))
 
 
+def step_context(cfg, mesh):
+    """The FSDP trace context for one step: registers compute-time (1d)
+    specs for 2d-stored params and the sequence-parallel activation
+    sharding, as the arch config demands.  Enter it around TRACING — the
+    step builders wrap their step body in it, so jit sees the gathers no
+    matter who traces (train driver, dry-run lowering, tests).  With a
+    replicated config or ``mesh=None`` it is an empty stack (identity)."""
+    import contextlib
+
+    stack = contextlib.ExitStack()
+    if mesh is None:
+        return stack
+    if cfg.param_sharding == "2d":
+        stack.enter_context(compute_specs(make_spec_fn(cfg, mesh)))
+    if cfg.param_sharding != "replicated":
+        stack.enter_context(
+            activation_sharding(make_activation_sharding(mesh)))
+    return stack
+
+
 def make_spec_fn(cfg, mesh):
     """Compute-time (1d) specs for a 2d-stored parameter tree."""
     from jax.sharding import NamedSharding

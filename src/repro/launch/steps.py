@@ -107,7 +107,7 @@ def jit_train_step(step: Callable, **jit_kwargs) -> Callable:
 
 
 def build_step(cfg: ArchConfig, opt_spec, *, cg_frac: int = 8,
-               min_cg: int = 1, state_sharding=None,
+               min_cg: int = 1, state_sharding=None, mesh=None,
                **opt_overrides) -> Tuple[Callable, Optimizer]:
     """One uniform LM train step for ANY registered optimiser.
 
@@ -115,21 +115,39 @@ def build_step(cfg: ArchConfig, opt_spec, *, cg_frac: int = 8,
     or an already-built config dataclass; ``opt_overrides`` are forwarded
     to ``optim.get_optimizer``.  Returns ``(step, opt)`` — jit ``step``
     and seed the loop with ``opt.init(params)``.
+
+    The model's per-leaf application counts (MoE expert usage, tied
+    embeddings at 2x — ``Model.share_counts``) feed the Sec. 4.3
+    share_counts preconditioner; first-order optimisers ignore them.
+
+    ``mesh`` + ``state_sharding`` make this the sharded second-order LM
+    path: θ-sized CG/optimiser state is pinned to the (2d) storage
+    sharding, and the step body is traced inside ``fsdp.step_context`` so
+    a 2d-stored parameter tree is FSDP-gathered to its 1d compute spec at
+    the point of use — in the primal forward AND in every GN/Fisher
+    JVP/VJP of the CG stage (the context registers contextvars at trace
+    time, so it holds no matter who jits: the train driver, the dry-run
+    lowering, or a test).  Pass ``min_cg`` = the data-parallel extent so
+    the CG sub-batch stays evenly sharded.
     """
+    from repro.launch import fsdp
+
     model = get_model(cfg)
     loss = ChunkedCELoss()
     fwd = _lm_forward(cfg, model)
-    opt = get_optimizer(opt_spec, fwd, loss, state_sharding=state_sharding,
-                        **opt_overrides)
+    counts = model.share_counts(model.param_shapes())
+    opt = get_optimizer(opt_spec, fwd, loss, share_counts=counts,
+                        state_sharding=state_sharding, **opt_overrides)
 
     def step(params, opt_state, batch):
-        lm_batch = dict(batch)
-        if "labels" not in lm_batch:
-            lm_batch["labels"] = lm_batch["tokens"]
-        cg_batch = (cg_sub_batch(lm_batch, cg_frac, min_cg)
-                    if opt.uses_cg_batch else None)
-        new_params, new_state, metrics = opt.step(params, opt_state,
-                                                  lm_batch, cg_batch)
+        with fsdp.step_context(cfg, mesh):
+            lm_batch = dict(batch)
+            if "labels" not in lm_batch:
+                lm_batch["labels"] = lm_batch["tokens"]
+            cg_batch = (cg_sub_batch(lm_batch, cg_frac, min_cg)
+                        if opt.uses_cg_batch else None)
+            new_params, new_state, metrics = opt.step(params, opt_state,
+                                                      lm_batch, cg_batch)
         return new_params, new_state, _scalar_metrics(metrics)
 
     return step, opt

@@ -37,7 +37,8 @@ from repro.data.pipeline import shard_batch
 from repro.data.synthetic import EpochPlan, asr_batch, lm_batch
 from repro.launch import steps as S
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.launch.sharding import (input_shardings, param_shardings,
+from repro.launch.sharding import (data_extent, input_shardings,
+                                   param_shardings,
                                    sequence_input_shardings)
 from repro.models.registry import get_model
 
@@ -55,6 +56,12 @@ def _resolve_mesh(mesh):
     if mesh is None or mesh == "none":
         return None
     if isinstance(mesh, str):
+        if "x" in mesh and mesh.split("x")[0].isdigit():
+            # "DxM" debug mesh, e.g. "4x2" = 4-way data x 2-way model —
+            # runs the full sharded path on host devices (pair with
+            # XLA_FLAGS=--xla_force_host_platform_device_count=8)
+            d, m = (int(v) for v in mesh.split("x"))
+            return make_debug_mesh(d, m)
         return make_production_mesh(multi_pod=mesh == "multi-pod")
     return mesh                        # an actual jax.sharding.Mesh
 
@@ -230,7 +237,12 @@ def evaluate_sequence(acfg, params, *, loss="mpe", kappa=0.5, frames=32,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b",
-                    choices=list_archs() + sorted(ASR_ARCHS))
+                    choices=(list_archs()
+                             + ["lm-" + a for a in list_archs()]
+                             + sorted(ASR_ARCHS)),
+                    help="architecture id; 'lm-<arch>' is an explicit "
+                    "alias for the LM path (e.g. 'lm-qwen2.5-3b'), "
+                    "'*-asr' ids run lattice sequence training")
     ap.add_argument("--optimizer", default="nghf",
                     choices=list_optimizers())
     ap.add_argument("--steps", type=int, default=10)
@@ -262,7 +274,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced geometry for CPU")
     ap.add_argument("--mesh", default="none",
-                    choices=["none", "single-pod", "multi-pod"])
+                    help="'none' | 'single-pod' | 'multi-pod' | 'DxM' "
+                    "(debug mesh: D-way data x M-way model, e.g. '4x2' "
+                    "on 8 forced host devices)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-json", default=None)
@@ -292,7 +306,10 @@ def main(argv=None):
                 json.dump(log, f, indent=1)
         return log
 
-    cfg = get_config(args.arch)
+    arch = args.arch
+    if arch.startswith("lm-") and arch[3:] in list_archs():
+        arch = arch[3:]                # 'lm-qwen2.5-3b' alias
+    cfg = get_config(arch)
     if args.smoke:
         cfg = cfg.smoke()
     model = get_model(cfg)
@@ -317,7 +334,11 @@ def main(argv=None):
                       cg_fused=args.cg_fused or None,
                       lr=args.lr if args.lr is not None
                       else LM_DEFAULT_LR.get(args.optimizer))
-    step_fn, opt = S.build_step(cfg, ocfg, cg_frac=4, state_sharding=pshard)
+    min_cg = 1
+    if mesh is not None:
+        min_cg = data_extent(mesh)[1]  # CG sub-batch stays data-sharded
+    step_fn, opt = S.build_step(cfg, ocfg, cg_frac=4, min_cg=min_cg,
+                                state_sharding=pshard, mesh=mesh)
     step = S.jit_train_step(step_fn)
     opt_state = opt.init(params, state_sharding=pshard)
 

@@ -87,10 +87,15 @@ class Model:
         """Relative per-sample application counts for the CG preconditioner.
 
         Transformer LMs apply every weight once per token => uniform counts
-        (the preconditioner reduces to identity).  Two exceptions:
+        (the preconditioner reduces to identity).  Three exceptions:
           * MoE expert weights: expected usage top_k/E per token.
           * enc-dec: encoder weights are applied encoder_frames times per
             sample vs T_dec for decoder weights; we fold the static ratio in.
+          * tied embeddings: with ``cfg.tie_embeddings`` the embed table is
+            applied TWICE per token (input embedding + output head share
+            one leaf — ``head_matrix`` returns its transpose), so its
+            residual/curvature contributions carry a 2x count (Sec. 4.3:
+            M = diag(c) divides them back down).
         """
         cfg = self.cfg
 
@@ -102,6 +107,8 @@ class Model:
                                    jnp.float32)
             if cfg.is_encoder_decoder and any(k == "encoder" for k in keys):
                 return jnp.asarray(cfg.encoder_frames / 1024.0, jnp.float32)
+            if cfg.tie_embeddings and any(k == "table" for k in keys):
+                return jnp.asarray(2.0, jnp.float32)
             return jnp.asarray(1.0, jnp.float32)
 
         return jax.tree_util.tree_map_with_path(leaf_count, params)

@@ -432,6 +432,126 @@ def test_kill_and_resume_matches_uninterrupted(tmp_path, optimizer, extra):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_state_shardings_mirror_covers_precond_and_delta():
+    """Regression (fisher_diag OOM): ``opt.state_shardings(pshard)`` must
+    mirror the 2d parameter shardings onto EVERY θ-sized state slot — the
+    fisher_diag EMA diagonal and the warm-start Δθ included — with
+    scalars replicated.  A 1x1 ("data","model") mesh keeps this a fast
+    structural test: divisibility always holds, so the specs carry the
+    real axis names even on one device."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.configs.base import get_config
+    from repro.launch.sharding import param_shardings
+    from repro.launch.steps import build_step
+    from repro.models.registry import get_model
+
+    cfg = get_config("qwen2.5-3b").smoke().replace(param_sharding="2d")
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    pshard = param_shardings(cfg, mesh, get_model(cfg).param_shapes())
+    ocfg = optim.config_for("nghf", cg_iters=2, ng_iters=1,
+                            preconditioner="fisher_diag", warm_start=True)
+    _, opt = build_step(cfg, ocfg, state_sharding=pshard, mesh=mesh)
+    sshard = opt.state_shardings(pshard)
+    for slot in ("delta", ("precond", "d")):
+        tree = sshard[slot] if isinstance(slot, str) \
+            else sshard[slot[0]][slot[1]]
+        assert jax.tree.structure(tree) == jax.tree.structure(pshard), slot
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(pshard)):
+            assert a == b, (slot, a, b)
+    # the mirror is not accidentally trivial: some spec names a mesh axis
+    specs = [s.spec for s in jax.tree.leaves(sshard["precond"]["d"])]
+    assert any(any(ax is not None for ax in sp) for sp in specs), specs
+    assert sshard["lam"].spec == P()
+    assert sshard["step"].spec == P()
+
+
+@pytest.mark.slow
+def test_sharded_nghf_kill_and_resume_exact():
+    """Satellite (c): a 2d-FSDP NGHF LM run killed after 2 updates and
+    resumed through ``checkpoint.io`` must reproduce the uninterrupted
+    3-update run EXACTLY — λ, warm-start Δθ, the fisher_diag EMA and the
+    step counter all survive the host round trip AND re-placement onto
+    the 8-device storage shardings.  Subprocess: forced device count must
+    precede jax init."""
+    import subprocess
+    import sys
+    import tempfile
+    import textwrap
+
+    script = textwrap.dedent("""
+        import tempfile
+        import jax, numpy as np
+        from repro.checkpoint.io import load_train_state, save_train_state
+        from repro.configs.base import get_config
+        from repro.core.optim import config_for
+        from repro.data.synthetic import lm_batch
+        from repro.data.pipeline import shard_batch
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import param_shardings
+        from repro.launch.steps import build_step
+        from repro.models.registry import get_model
+
+        assert jax.device_count() >= 8, jax.device_count()
+        cfg = get_config("qwen2.5-3b").smoke().replace(
+            param_sharding="2d", compute_dtype="float32")
+        model = get_model(cfg)
+        mesh = make_debug_mesh(4, 2)
+        pshard = param_shardings(cfg, mesh, model.param_shapes())
+        ocfg = config_for("nghf", cg_iters=2, ng_iters=1,
+                          preconditioner="fisher_diag", warm_start=True,
+                          adapt_lam=True)
+        fn, opt = build_step(cfg, ocfg, cg_frac=2, min_cg=4,
+                             state_sharding=pshard, mesh=mesh)
+        step = jax.jit(fn)          # no donation: states are reused below
+        sshard = opt.state_shardings(pshard)
+        batches = [shard_batch(
+            lm_batch(i, batch=8, seq_len=16, vocab=cfg.vocab_size), mesh)
+            for i in range(3)]
+        params0 = jax.tree.map(
+            jax.device_put, model.init(jax.random.PRNGKey(0)), pshard)
+
+        # uninterrupted: 3 updates
+        p, s = params0, opt.init(params0, state_sharding=pshard)
+        for i in range(3):
+            p, s, _ = step(p, s, batches[i])
+
+        # killed at 2: save via checkpoint.io, reload, re-place, 1 more
+        q, t = params0, opt.init(params0, state_sharding=pshard)
+        for i in range(2):
+            q, t, _ = step(q, t, batches[i])
+        ck = tempfile.mkdtemp()
+        save_train_state(ck, q, t, step=2)
+        del q, t
+        q2, t2, k = load_train_state(
+            ck, jax.tree.map(np.zeros_like, jax.device_get(params0)),
+            opt.init(params0, state_sharding=pshard), shardings=pshard)
+        assert k == 2
+        t2 = jax.tree.map(jax.device_put, t2, sshard)
+        q3, t3, _ = step(q2, t2, batches[2])
+
+        for a, b in zip(jax.tree.leaves(jax.device_get(p)),
+                        jax.tree.leaves(jax.device_get(q3))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(jax.device_get(s)),
+                        jax.tree.leaves(jax.device_get(t3))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(t3["step"]) == 3
+        print("SHARDED_RESUME_OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"),
+               TMPDIR=tempfile.gettempdir())
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_RESUME_OK" in out.stdout
+
+
 def test_legacy_params_only_checkpoint_still_loads(tmp_path, key):
     """Pre-redesign checkpoints (params only) restore params and leave the
     optimiser state fresh."""

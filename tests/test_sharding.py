@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
+from conftest import given, settings, st  # hypothesis, or skip-shim
 from repro.configs.base import INPUT_SHAPES, get_config, list_archs
 from repro.launch.sharding import (input_shardings, lattice_pspec,
                                    lattice_shardings, param_pspec,
@@ -233,6 +234,226 @@ def test_sequence_step_matches_single_device():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "SEQ_SHARD_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_lm_fsdp_nghf_step_matches_single_device():
+    """The tentpole acceptance test: ONE NGHF update on the qwen smoke LM
+    with 2d (FSDP) parameter storage over an 8-device (4 data x 2 model)
+    CPU mesh must match the single-device update — same CG candidate
+    selection, params allclose (relative-L2; measured headroom ~100x).
+    Also pins the fisher_diag regression: the EMA diagonal coming OUT of
+    the jitted step must carry the storage sharding (it used to be
+    replicated — θ-sized, an OOM at mixtral scale)."""
+    script = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs.base import get_config
+        from repro.core.optim import config_for
+        from repro.data.synthetic import lm_batch
+        from repro.data.pipeline import shard_batch
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.sharding import param_shardings
+        from repro.launch.steps import build_step, jit_train_step
+        from repro.models.registry import get_model
+
+        assert jax.device_count() >= 8, jax.device_count()
+        cfg = get_config("qwen2.5-3b").smoke().replace(
+            param_sharding="2d", compute_dtype="float32")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = lm_batch(0, batch=8, seq_len=16, vocab=cfg.vocab_size)
+        ocfg = config_for("nghf", cg_iters=2, ng_iters=1,
+                          preconditioner="fisher_diag", warm_start=True)
+
+        fn1, opt1 = build_step(cfg, ocfg, cg_frac=2, min_cg=4)
+        p1, s1, m1 = jax.jit(fn1)(params, opt1.init(params), batch)
+        p1 = jax.device_get(p1)
+
+        mesh = make_debug_mesh(4, 2)
+        pshard = param_shardings(cfg, mesh, model.param_shapes())
+        pp = jax.tree.map(jax.device_put, params, pshard)
+        fn8, opt8 = build_step(cfg, ocfg, cg_frac=2, min_cg=4,
+                               state_sharding=pshard, mesh=mesh)
+        # jit_train_step donates (params, opt_state) exactly as the train
+        # driver does; pp/s8 are dead after the call (never reused below).
+        p8, s8, m8 = jit_train_step(fn8)(
+            pp, opt8.init(pp, state_sharding=pshard),
+            shard_batch(batch, mesh))
+        p8 = jax.device_get(p8)
+
+        assert int(m1["cg_best_iter"]) == int(m8["cg_best_iter"])
+        assert abs(float(m1["loss"]) - float(m8["loss"])) < 1e-4
+        a = np.concatenate([np.ravel(np.asarray(x, np.float64))
+                            for x in jax.tree.leaves(p1)])
+        c = np.concatenate([np.ravel(np.asarray(x, np.float64))
+                            for x in jax.tree.leaves(p8)])
+        rel_l2 = np.linalg.norm(a - c) / np.linalg.norm(a)
+        assert rel_l2 < 1e-4, rel_l2
+        np.testing.assert_allclose(c, a, rtol=1e-3, atol=3e-5)
+
+        # θ-sized state OUT of the step keeps the 2d storage sharding
+        # leaf-for-leaf (fisher_diag EMA diagonal + warm-start Δθ; norm
+        # scales are legitimately replicated because their PARAM sharding
+        # is too) — the fisher_diag regression showed up here as every d
+        # leaf replicated.
+        for tree in (s8["precond"]["d"], s8["delta"]):
+            n_sharded = 0
+            for (path, l), sh in zip(
+                    jax.tree_util.tree_leaves_with_path(tree),
+                    jax.tree.leaves(pshard)):
+                assert l.sharding.is_equivalent_to(sh, l.ndim), \
+                    (jax.tree_util.keystr(path), l.sharding, sh)
+                n_sharded += not l.sharding.is_fully_replicated
+            assert n_sharded >= 10, n_sharded
+        print("LM_FSDP_OK", rel_l2)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "LM_FSDP_OK" in out.stdout
+
+
+@pytest.mark.mesh8
+def test_sharded_cg_history_and_tree_math_on_mesh():
+    """8-device coverage of the core numerics (fast lane, ``mesh8``):
+
+    * sharded fused cg_solve (fused=True + constrain) on 2d-sharded
+      buffers reproduces the unsharded solve's ITERATE HISTORY at equal
+      depth — residual trajectory, candidate selection, solution;
+    * core.tree_math ops commute with with_sharding_constraint on a
+      mixed-dtype tree over a real (4 data x 2 model) mesh: elementwise
+      ops bit-equal, reductions to f32 round-off."""
+    script = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import tree_math as tm
+        from repro.core.cg import cg_solve
+        from repro.launch.mesh import make_debug_mesh
+
+        assert jax.device_count() >= 8, jax.device_count()
+        mesh = make_debug_mesh(4, 2)
+        rng = np.random.default_rng(0)
+
+        # --- sharded-vs-unsharded cg_solve history -----------------------
+        def spd(n, cond):
+            q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+            eig = np.geomspace(1.0, cond, n)
+            return ((q * eig) @ q.T).astype(np.float32)
+
+        A1, A2 = spd(16, 30.0), spd(64, 80.0)
+        b = {"a": jnp.asarray(rng.standard_normal(16), jnp.float32),
+             "c": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+        bv = lambda v: {
+            "a": jnp.asarray(A1) @ v["a"],
+            "c": (jnp.asarray(A2) @ v["c"].reshape(-1)).reshape(8, 8)}
+        shards = {"a": NamedSharding(mesh, P(("data",))),
+                  "c": NamedSharding(mesh, P(("data",), "model"))}
+        constrain = lambda t: jax.tree.map(
+            jax.lax.with_sharding_constraint, t, shards)
+        evf = lambda x: jnp.abs(tm.norm(x) - 0.5)
+
+        ref = jax.jit(lambda b: cg_solve(bv, b, iters=8, eval_fn=evf))(b)
+        bs = jax.tree.map(jax.device_put, b, shards)
+        got = jax.jit(lambda b: cg_solve(
+            bv, constrain(b), iters=8, eval_fn=evf, fused=True,
+            constrain=constrain))(bs)
+        np.testing.assert_allclose(np.asarray(got.resid),
+                                   np.asarray(ref.resid), rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(got.quad),
+                                   np.asarray(ref.quad), rtol=2e-4,
+                                   atol=1e-6)
+        assert int(got.best_iter) == int(ref.best_iter)
+        for k in ("a", "c"):
+            np.testing.assert_allclose(np.asarray(got.x[k]),
+                                       np.asarray(ref.x[k]), rtol=2e-4,
+                                       atol=1e-6)
+
+        # --- tree_math commutes with with_sharding_constraint ------------
+        x = {"w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+             "e": jnp.asarray(rng.standard_normal((16, 16)), jnp.bfloat16),
+             "s": jnp.asarray(rng.standard_normal(16), jnp.float32)}
+        y = jax.tree.map(lambda l: l + l.dtype.type(0.25), x)
+        xsh = {"w": NamedSharding(mesh, P(("data",), "model")),
+               "e": NamedSharding(mesh, P("model", ("data",))),
+               "s": NamedSharding(mesh, P(("data",)))}
+        con = lambda t: jax.tree.map(
+            jax.lax.with_sharding_constraint, t, xsh)
+        for name, op in [("add", tm.add), ("sub", tm.sub),
+                         ("mul", tm.mul),
+                         ("axpy", lambda a, b: tm.axpy(0.5, a, b))]:
+            plain = jax.jit(lambda a, b: op(a, b))(x, y)
+            comm = jax.jit(lambda a, b: con(op(con(a), con(b))))(x, y)
+            for k in x:
+                assert plain[k].dtype == comm[k].dtype, (name, k)
+                np.testing.assert_array_equal(
+                    np.asarray(plain[k], np.float32),
+                    np.asarray(comm[k], np.float32), err_msg=name)
+        for name, red in [("vdot", lambda a, b: tm.vdot(a, b)),
+                          ("norm", lambda a, b: tm.norm(a))]:
+            plain = float(jax.jit(red)(x, y))
+            comm = float(jax.jit(lambda a, b: red(con(a), con(b)))(x, y))
+            assert abs(plain - comm) <= 1e-5 * (abs(plain) + 1.0), \
+                (name, plain, comm)
+        print("MESH8_CORE_OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH8_CORE_OK" in out.stdout
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), alpha=st.floats(-4.0, 4.0))
+def test_tree_math_commutes_with_sharding_constraint(seed, alpha):
+    """Property (satellite d): every core.tree_math op commutes with
+    with_sharding_constraint on mixed-dtype param pytrees — constraining
+    inputs and outputs changes neither values nor dtypes.  Runs on the
+    session's real devices (the constraint is a layout annotation, not a
+    value op); the mesh8 subprocess test covers a genuine 4x2 mesh."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x = {"w": jax.random.normal(ks[0], (4, 6), jnp.float32),
+         "e": jax.random.normal(ks[1], (6, 2)).astype(jnp.bfloat16),
+         "s": jax.random.normal(ks[2], (3,), jnp.float32)}
+    y = jax.tree.map(lambda l: (l * l.dtype.type(0.5)
+                                + l.dtype.type(0.125)), x)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree.map(
+        lambda l: jax.sharding.NamedSharding(mesh, P(*([None] * l.ndim))),
+        x)
+    con = lambda t: jax.tree.map(jax.lax.with_sharding_constraint, t, sh)
+
+    from repro.core import tree_math as tm
+    ops = [lambda a, b: tm.add(a, b), lambda a, b: tm.sub(a, b),
+           lambda a, b: tm.mul(a, b),
+           lambda a, b: tm.scale(a, jnp.float32(alpha)),
+           lambda a, b: tm.axpy(jnp.float32(alpha), a, b),
+           lambda a, b: tm.where(jnp.bool_(seed % 2), a, b),
+           lambda a, b: tm.cast_like(a, b),
+           lambda a, b: tm.zeros_like(a)]
+    for i, op in enumerate(ops):
+        plain = jax.jit(op)(x, y)
+        comm = jax.jit(lambda a, b: con(op(con(a), con(b))))(x, y)
+        for k in x:
+            assert plain[k].dtype == comm[k].dtype, (i, k)
+            np.testing.assert_array_equal(np.asarray(plain[k], np.float32),
+                                          np.asarray(comm[k], np.float32),
+                                          err_msg=f"op {i} leaf {k}")
+    for red in (lambda a, b: tm.vdot(a, b), lambda a, b: tm.norm(a)):
+        plain = jax.jit(red)(x, y)
+        comm = jax.jit(lambda a, b: red(con(a), con(b)))(x, y)
+        np.testing.assert_array_equal(np.asarray(plain), np.asarray(comm))
 
 
 def test_hlo_analysis_trip_counts():
